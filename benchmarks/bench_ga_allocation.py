@@ -1,0 +1,52 @@
+"""Paper Fig. 12: automatic GA-based layer-core allocation vs manual.
+
+ResNet-18 on the homogeneous (MC:HomTPU) and heterogeneous (MC:Hetero)
+quad-core architectures; manual = ping-pong (homogeneous) / best-dataflow-fit
+(heterogeneous); GA run with both latency- and memory-prioritized scheduling
+to expose the latency-memory trade-off.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.paper_workloads import resnet18
+from repro.core import CostModel, evaluate_allocation, explore
+from repro.core.allocator import manual_best_fit, manual_pingpong
+from repro.hw.catalog import mc_hetero, mc_hom_tpu
+
+GRANULARITY = ("tile", 32, 1)
+
+
+def run(report=print, full: bool = False, seed: int = 0) -> dict:
+    pop, gens = (24, 16) if full else (12, 8)
+    out = {}
+    report("== Fig. 12: GA vs manual layer-core allocation (ResNet-18) ==")
+    report(f"{'arch':10s} {'allocation':16s} {'latency(cc)':>12s} {'energy(uJ)':>11s} "
+           f"{'peak mem(KB)':>13s}")
+    for arch_name, arch_fn in (("MC:HomTPU", mc_hom_tpu), ("MC:Hetero", mc_hetero)):
+        acc = arch_fn()
+        w = resnet18()
+        manual = (manual_pingpong(w, acc) if arch_name == "MC:HomTPU"
+                  else manual_best_fit(w, acc, CostModel(w, acc)))
+        res_m = evaluate_allocation(w, acc, manual, granularity=GRANULARITY)
+        rows = {"manual": res_m}
+        for prio in ("latency", "memory"):
+            r = explore(w, acc, granularity=GRANULARITY, objective="edp",
+                        priority=prio, pop_size=pop, generations=gens, seed=seed)
+            rows[f"GA/{prio}-prio"] = r.schedule
+        for label, r in rows.items():
+            report(f"{arch_name:10s} {label:16s} {r.latency_cc:12.3e} "
+                   f"{r.energy_pj / 1e6:11.1f} {r.peak_mem_bytes / 1024:13.1f}")
+        out[arch_name] = {k: dict(latency=v.latency_cc, energy=v.energy_pj,
+                                  peak=v.peak_mem_bytes) for k, v in rows.items()}
+        ga_lat = out[arch_name]["GA/latency-prio"]
+        man = out[arch_name]["manual"]
+        report(f"{arch_name:10s} GA latency gain vs manual: "
+               f"{man['latency'] / ga_lat['latency']:.2f}x, "
+               f"energy gain: {man['energy'] / ga_lat['energy']:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

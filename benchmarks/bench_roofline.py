@@ -1,0 +1,45 @@
+"""Roofline table from the dry-run reports (single-pod 16x16 mesh).
+
+Reads reports/dryrun/16x16/<arch>/<shape>.json (produced by
+`python -m repro.launch.dryrun --arch all --shape all --both-meshes`)
+and prints the per-cell terms; EXPERIMENTS.md §Roofline is generated from
+this output.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+
+def run(report=print, root: str = "reports/dryrun", mesh: str = "16x16"):
+    rows = []
+    report(f"== Roofline per (arch x shape), mesh {mesh} "
+           f"(t_comp/t_mem/t_coll seconds per step; v5e constants) ==")
+    report(f"{'arch':18s} {'shape':11s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'bound':>6s} {'useful':>7s} {'MFU':>6s}")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            path = os.path.join(root, mesh, arch, f"{shape}.json")
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                rep = json.load(f)
+            if rep.get("skipped"):
+                report(f"{arch:18s} {shape:11s} {'skip: ' + rep['why'][:48]}")
+                continue
+            if rep.get("failed"):
+                report(f"{arch:18s} {shape:11s} FAILED")
+                continue
+            r = rep["roofline"]
+            report(f"{arch:18s} {shape:11s} {r['t_compute_s']:9.2e} "
+                   f"{r['t_memory_s']:9.2e} {r['t_collective_s']:9.2e} "
+                   f"{r['bottleneck'][:6]:>6s} {r['useful_flops_ratio']:7.2f} "
+                   f"{r['mfu']:6.3f}")
+            rows.append(dict(arch=arch, shape=shape, **r))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 7: latency- vs memory-prioritized scheduling trade-off.
+
+Same workload, same allocation; the two priorities should expose the
+latency <-> peak-memory trade-off (memory priority consumes data deeper into
+the fused stack at the cost of core idle time).
+"""
+from __future__ import annotations
+
+from repro.configs.paper_workloads import resnet18
+from repro.core import evaluate_allocation
+from repro.core.allocator import manual_pingpong
+from repro.hw.catalog import mc_hom_tpu
+
+
+def run(report=print) -> dict:
+    acc = mc_hom_tpu()
+    w = resnet18()
+    alloc = manual_pingpong(w, acc)
+    out = {}
+    report("== Fig. 7: scheduler priority trade-off (ResNet-18, MC:HomTPU) ==")
+    for prio in ("latency", "memory"):
+        r = evaluate_allocation(w, acc, alloc, granularity=("tile", 32, 1),
+                                priority=prio)
+        out[prio] = dict(latency=r.latency_cc, peak=r.act_peak_bytes)
+        report(f"priority={prio:8s}: latency={r.latency_cc:.3e} cc  "
+               f"activation peak={r.act_peak_bytes / 1024:.1f} KB")
+    lat_ratio = out["memory"]["latency"] / out["latency"]["latency"]
+    mem_ratio = out["latency"]["peak"] / max(out["memory"]["peak"], 1.0)
+    report(f"memory-prio: {mem_ratio:.2f}x lower peak at {lat_ratio:.2f}x the latency")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Benchmark driver: one module per paper table/figure + the TPU-side
+roofline/planner/kernel benches.
+
+  PYTHONPATH=src python -m benchmarks.run           # quick mode
+  PYTHONPATH=src python -m benchmarks.run --full    # full GA budgets
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_exploration, bench_ga_allocation,
+                            bench_granularity, bench_kernels,
+                            bench_pipeline_plan, bench_roofline, bench_rtree,
+                            bench_scheduler_priority, bench_validation)
+
+    benches = [
+        ("validation (paper Table I)", lambda: bench_validation.run()),
+        ("rtree (paper Sec. III-B)", lambda: bench_rtree.run(full=args.full)),
+        ("scheduler priority (paper Fig. 7)",
+         lambda: bench_scheduler_priority.run()),
+        ("ga allocation (paper Fig. 12)",
+         lambda: bench_ga_allocation.run(full=args.full)),
+        ("granularity co-exploration (paper Fig. 4)",
+         lambda: bench_granularity.run()),
+        ("exploration (paper Figs. 13-15)",
+         lambda: bench_exploration.run(full=args.full)),
+        ("kernels (Pallas blocks)", lambda: bench_kernels.run()),
+        ("pipeline planner (beyond-paper)", lambda: bench_pipeline_plan.run()),
+        ("roofline single-pod (dry-run reports)",
+         lambda: bench_roofline.run(mesh="16x16")),
+        ("roofline multi-pod (dry-run reports)",
+         lambda: bench_roofline.run(mesh="2x16x16")),
+    ]
+    t00 = time.perf_counter()
+    failures = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'=' * 72}\n# {name}\n{'=' * 72}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception as e:  # keep the suite going; report at the end
+            print(f"BENCH FAILED: {name}: {e!r}", flush=True)
+            failures.append(name)
+        print(f"[{name}: {time.perf_counter() - t0:.1f}s]", flush=True)
+    print(f"\ntotal: {time.perf_counter() - t00:.1f}s"
+          + (f"  FAILURES: {failures}" if failures else "  (all benches ok)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Architecture exploration (paper Sec. V in miniature): two DNNs across the
+seven iso-area accelerators, layer-by-layer vs layer-fused, EDP-optimized.
+
+  PYTHONPATH=src python examples/explore_architectures.py
+"""
+import numpy as np
+
+from repro.configs.paper_workloads import EXPLORATION_WORKLOADS
+from repro.core import explore
+from repro.hw.catalog import EXPLORATION_ARCHITECTURES
+
+nets = {k: EXPLORATION_WORKLOADS[k] for k in ("resnet18", "squeezenet")}
+print(f"{'architecture':12s} {'network':12s} {'EDP(lbl)':>11s} "
+      f"{'EDP(fused)':>11s} {'gain':>6s}")
+for arch_name, arch_fn in EXPLORATION_ARCHITECTURES.items():
+    gains = []
+    for net_name, net_fn in nets.items():
+        acc, w = arch_fn(), net_fn()
+        lbl = explore(w, acc, granularity="layer", pop_size=8, generations=5)
+        fused = explore(w, acc, granularity=("tile", 32, 1), pop_size=8,
+                        generations=5)
+        gain = lbl.edp / fused.edp
+        gains.append(gain)
+        print(f"{arch_name:12s} {net_name:12s} {lbl.edp:11.3e} "
+              f"{fused.edp:11.3e} {gain:5.1f}x")
+    print(f"{arch_name:12s} {'geomean':12s} {'':23s} "
+          f"{np.exp(np.mean(np.log(gains))):5.1f}x")

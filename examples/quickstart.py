@@ -1,0 +1,33 @@
+"""Quickstart: Stream design-space exploration in ~20 lines.
+
+Explores ResNet-18 on the heterogeneous quad-core accelerator, comparing
+traditional layer-by-layer scheduling against fine-grained layer fusion
+(the paper's central experiment), then prints the best schedule's stats.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.paper_workloads import resnet18
+from repro.core import explore
+from repro.hw.catalog import mc_hetero
+
+workload = resnet18()
+accelerator = mc_hetero()
+print(f"workload: {workload}")
+print(f"accelerator: {accelerator.name} ({accelerator.n_cores} cores)")
+
+lbl = explore(workload, accelerator, granularity="layer",
+              objective="edp", pop_size=10, generations=6)
+fused = explore(workload, accelerator, granularity=("tile", 32, 1),
+                objective="edp", pop_size=10, generations=6)
+
+for name, r in (("layer-by-layer", lbl), ("layer-fused", fused)):
+    print(f"\n{name}:")
+    print(f"  latency  : {r.latency_cc:12.3e} cc")
+    print(f"  energy   : {r.energy_pj / 1e6:12.1f} uJ")
+    print(f"  EDP      : {r.edp:12.3e}")
+    print(f"  peak mem : {r.peak_mem_bytes / 1024:12.1f} KB")
+    print(f"  allocation: {r.allocation.tolist()}")
+    print(f"  runtime  : {r.runtime_s:.2f} s (CNs: {len(r.graph.cns)})")
+
+print(f"\nEDP reduction from layer fusion: {lbl.edp / fused.edp:.1f}x "
+      f"(paper reports up to 30x on this architecture class)")

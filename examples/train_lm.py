@@ -1,0 +1,28 @@
+"""End-to-end training driver: a ~100M-class llama on synthetic data with
+checkpointing and resume (reduced further by default so it runs on CPU in
+a few minutes; pass --full-100m on a real machine).
+
+  PYTHONPATH=src python examples/train_lm.py            # ~10M, 200 steps
+  PYTHONPATH=src python examples/train_lm.py --full-100m --steps 300
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    if args.full_100m:   # ~100M params: 12 layers x d_model 768
+        argv = ["--arch", "llama3.2-3b", "--smoke", "--d-model", "768",
+                "--layers", "12", "--batch", "16", "--seq", "512"]
+    else:                # ~10M params: CPU-friendly
+        argv = ["--arch", "llama3.2-3b", "--smoke", "--d-model", "256",
+                "--layers", "4", "--batch", "8", "--seq", "128"]
+    argv += ["--steps", str(args.steps), "--ckpt-dir", args.ckpt_dir,
+             "--ckpt-every", "100"]
+    train_main(argv)

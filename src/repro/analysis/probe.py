@@ -1,0 +1,70 @@
+"""Perf probe: attribute collective/dot bytes to model source locations.
+
+Parses op metadata (op_name="jit(...)/...") from the compiled HLO so each
+collective's bytes can be blamed on the jax source op that produced it —
+the 'profile' the perf-iteration loop reads (no real-TPU trace exists on
+this container)."""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.analysis.hlo import (COLLECTIVES, _shape_bytes, analyze,
+                                collective_wire_bytes, parse_computations)
+
+
+def collective_blame(hlo_text: str, top: int = 15):
+    comps, entry = parse_computations(hlo_text)
+    a = analyze(hlo_text)
+
+    # recompute multipliers (mirrors analyze())
+    from repro.analysis.hlo import _callees
+    mult = defaultdict(float)
+    stack = [(entry, 1.0)]
+    guard = 0
+    while stack and guard < 200_000:
+        guard += 1
+        c, m = stack.pop()
+        if c not in comps or m == 0:
+            continue
+        mult[c] += m
+        for op in comps[c]:
+            for callee, is_body in _callees(op):
+                if callee not in comps:
+                    continue
+                k = m * a.while_trip_counts.get(callee, 1) if is_body else m
+                stack.append((callee, k))
+
+    blame = defaultdict(lambda: [0.0, 0, ""])
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        for op in ops:
+            base = op.opcode.replace("-start", "")
+            if base not in COLLECTIVES:
+                continue
+            nbytes = collective_wire_bytes(op)
+            mo = re.search(r'op_name="([^"]*)"', op.attrs)
+            name = mo.group(1) if mo else op.name
+            mf = re.search(r"stack_frame_id=(\d+)", op.attrs)
+            frame = f"#{mf.group(1)}" if mf else ""
+            # strip trailing ids, keep the semantic path tail
+            tail = "/".join(name.split("/")[-5:]) + frame
+            key = (base, tail)
+            blame[key][0] += m * nbytes
+            blame[key][1] += int(m)
+            blame[key][2] = op.out_type[:40]
+    rows = sorted(((v[0], k, v[1], v[2]) for k, v in blame.items()),
+                  reverse=True)
+    return rows[:top], a
+
+
+def print_blame(hlo_text: str, top: int = 15, report=print):
+    rows, a = collective_blame(hlo_text, top)
+    report(f"total collective bytes/device: {a.total_collective_bytes:.3e}  "
+           f"breakdown: { {k: f'{v:.2e}' for k, v in a.collective_bytes.items()} }")
+    report(f"{'bytes':>10s} {'x':>5s} {'kind':18s} source")
+    for nbytes, (kind, tail), count, otype in rows:
+        report(f"{nbytes:10.3e} {count:5d} {kind:18s} {tail[:90]}")
+    return rows, a

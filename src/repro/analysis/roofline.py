@@ -1,0 +1,109 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e constants).
+
+    compute term    = FLOPs / (chips x 197e12 bf16 FLOP/s)
+    memory term     = HBM bytes / (chips x 819e9 B/s)
+    collective term = collective bytes / (chips x 50e9 B/s per link)
+
+FLOPs / bytes come from the while-aware HLO walker (analysis.hlo); XLA's own
+cost_analysis() is reported alongside (it undercounts scanned layers). The
+useful-compute ratio compares analytic MODEL_FLOPS = 6*N*D (dense) /
+6*N_active*D (MoE) against walker FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis import hlo as hlo_mod
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e class)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per-chip effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    chips: int
+    flops: float                     # walker, PER-DEVICE (SPMD module)
+    hbm_bytes: float                 # per-device
+    attn_tile_bytes: float           # VMEM-resident under the Pallas kernel
+    collective_bytes: float          # per-device
+    collective_breakdown: dict[str, float]
+    model_flops: float               # analytic 6*N*D-style, GLOBAL
+    xla_flops: float                 # raw cost_analysis (undercounts scans)
+    xla_bytes: float
+
+    # The compiled artifact is the per-device SPMD program, so each term is
+    # per-chip time directly (chip FLOPs / chip peak, etc.).
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        """HBM term with attention score tiles fused away (the Pallas flash
+        kernel keeps them in VMEM; XLA:CPU materializes them)."""
+        return (self.hbm_bytes - self.attn_tile_bytes) / HBM_BW
+
+    @property
+    def t_memory_unfused(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: bottleneck term (perfect overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        t = self.step_time_s
+        return self.model_flops / (t * self.chips * PEAK_FLOPS) if t else 0.0
+
+    def summary(self) -> dict:
+        return dict(
+            chips=self.chips, flops=self.flops, hbm_bytes=self.hbm_bytes,
+            attn_tile_bytes=self.attn_tile_bytes,
+            t_memory_unfused_s=self.t_memory_unfused,
+            collective_bytes=self.collective_bytes,
+            collective_breakdown=self.collective_breakdown,
+            t_compute_s=self.t_compute, t_memory_s=self.t_memory,
+            t_collective_s=self.t_collective, bottleneck=self.bottleneck,
+            model_flops=self.model_flops,
+            useful_flops_ratio=self.useful_flops_ratio, mfu=self.mfu,
+            xla_flops=self.xla_flops, xla_bytes=self.xla_bytes,
+        )
+
+
+def analyze_compiled(compiled, model_flops: float, chips: int,
+                     hlo_text: str | None = None) -> Roofline:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    walk = hlo_mod.analyze(text)
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        xla_flops = float(ca.get("flops", 0.0))
+        xla_bytes = float(ca.get("bytes accessed", 0.0))
+    except Exception:
+        xla_flops = xla_bytes = 0.0
+    return Roofline(
+        chips=chips, flops=walk.flops, hbm_bytes=walk.hbm_bytes,
+        attn_tile_bytes=walk.attn_tile_bytes,
+        collective_bytes=walk.total_collective_bytes,
+        collective_breakdown=walk.collective_bytes,
+        model_flops=model_flops, xla_flops=xla_flops, xla_bytes=xla_bytes,
+    )

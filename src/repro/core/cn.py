@@ -1,0 +1,245 @@
+"""Stream Step 1: Computation-Node identification & attribute extraction.
+
+A CN isolates a subset of inner for-loops of a layer; the remaining outer-CN
+loops enumerate the CNs and fix their intra-layer execution order (paper
+Sec. III-A). Identification follows the paper's two principles:
+
+1. *Layer topology awareness* — full-fan-in layers (fc) collapse to a single
+   CN (breaking the fused stack); spatially-local layers (conv/pool/add/...)
+   split along their spatial output loops (OY, optionally OX).
+
+2. *HW dataflow awareness* — a CN must minimally encompass every loop dim
+   that is spatially unrolled in ANY core of the accelerator, so no split is
+   made along such dims (or tiles are kept >= the max unroll factor).
+
+Per-CN attributes (paper Fig. 5):
+  - `discardable_inputs`: input elements used exclusively by this CN, freed
+    when it finishes (exact half-space intersection math, see
+    `_exclusive_volume`),
+  - `new_outputs`: final output elements first produced by this CN.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from repro.core.workload import FULL_FANIN_OPS, Layer, Workload
+
+# Dims along which CNs may be split (spatial output dims, non-reduction).
+SPLITTABLE = ("OY", "OX")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rect:
+    """Axis-aligned integer box: dim -> (start, stop). Missing dim == full."""
+
+    ranges: tuple[tuple[str, int, int], ...]
+
+    def volume(self) -> int:
+        return math.prod(max(0, b - a) for _, a, b in self.ranges)
+
+    def as_dict(self) -> dict[str, tuple[int, int]]:
+        return {d: (a, b) for d, a, b in self.ranges}
+
+    def intersection_volume(self, other: "Rect") -> int:
+        mine, theirs = self.as_dict(), other.as_dict()
+        vol = 1
+        for d in set(mine) | set(theirs):
+            a0, b0 = mine.get(d, (-(1 << 60), 1 << 60))
+            a1, b1 = theirs.get(d, (-(1 << 60), 1 << 60))
+            vol *= max(0, min(b0, b1) - max(a0, a1))
+            if vol == 0:
+                return 0
+        return vol
+
+
+@dataclasses.dataclass
+class CN:
+    """A computation node: one schedulable part of a layer."""
+
+    id: int                      # global CN id
+    layer: int                   # owning layer id
+    idx: tuple[int, ...]         # position in the outer-CN loop grid
+    intra_rank: int              # row-major rank == intra-layer exec order
+    out_rect: Rect               # produced region of the layer output tensor
+    in_rects: dict[int, Rect]    # producer layer id (-1 = external) -> needed input region
+    macs: int
+    discardable_inputs: int      # elements freed when this CN finishes
+    new_inputs: int              # input elements not already needed by earlier CNs
+    new_outputs: int             # final output elements generated
+    weight_bytes: int            # layer weights (shared across the layer's CNs)
+    in_bits: int = 8
+    out_bits: int = 8
+
+    @property
+    def out_bytes(self) -> int:
+        return self.new_outputs * self.out_bits // 8
+
+    def size_signature(self) -> tuple:
+        """CNs with equal signatures have identical mapping cost (Step 3 cache key)."""
+        return (self.layer, tuple(sorted(self.out_rect.as_dict().items())))
+
+
+def _split_ranges(extent: int, parts: int) -> list[tuple[int, int]]:
+    """Split [0, extent) into `parts` near-equal contiguous ranges."""
+    parts = max(1, min(parts, extent))
+    base, rem = divmod(extent, parts)
+    out, start = [], 0
+    for i in range(parts):
+        stop = start + base + (1 if i < rem else 0)
+        out.append((start, stop))
+        start = stop
+    return out
+
+
+def _receptive(rng: tuple[int, int], stride: int, fsize: int, pad: int, in_extent: int) -> tuple[int, int]:
+    """Input range needed to produce output range `rng` (clipped by padding)."""
+    a = rng[0] * stride - pad
+    b = (rng[1] - 1) * stride - pad + fsize
+    return (max(0, a), min(in_extent, b))
+
+
+def resolve_splits(
+    layer: Layer,
+    granularity,
+    min_tile: Mapping[str, int] | None = None,
+) -> dict[str, int]:
+    """Number of CN splits per splittable dim for `layer` under `granularity`.
+
+    granularity: 'layer' | 'line' | ('tile', n_oy, n_ox) | dict(layer_id->granularity)
+    min_tile: HW-dataflow-aware minimum tile extent per dim (max spatial unroll
+              across cores); splits are clamped so tiles stay >= min_tile.
+    """
+    if isinstance(granularity, dict):
+        granularity = granularity.get(layer.id, "layer")
+    if layer.op in FULL_FANIN_OPS or granularity == "layer":
+        return {}
+    oy, ox = layer.d("OY"), layer.d("OX")
+    if granularity == "line":
+        want = {"OY": oy, "OX": 1}
+    elif isinstance(granularity, tuple) and granularity[0] == "tile":
+        want = {"OY": int(granularity[1]), "OX": int(granularity[2]) if len(granularity) > 2 else 1}
+    else:
+        raise ValueError(f"unknown granularity {granularity!r}")
+    splits = {}
+    for dim, extent in (("OY", oy), ("OX", ox)):
+        n = min(want.get(dim, 1), extent)
+        if min_tile and dim in min_tile and min_tile[dim] > 1:
+            n = min(n, max(1, extent // min_tile[dim]))
+        if n > 1:
+            splits[dim] = n
+    return splits
+
+
+def identify_cns(
+    workload: Workload,
+    granularity="line",
+    min_tile: Mapping[str, int] | None = None,
+) -> list[CN]:
+    """Split every layer of `workload` into CNs (Stream Step 1)."""
+    cns: list[CN] = []
+    for lid in workload.topo_order():
+        layer = workload.layers[lid]
+        splits = resolve_splits(layer, granularity, min_tile)
+        dims = [d for d in SPLITTABLE if d in splits]
+        ranges_per_dim = {d: _split_ranges(layer.d(d), splits[d]) for d in dims}
+        grid = [len(ranges_per_dim[d]) for d in dims]
+        n_cn = math.prod(grid) if grid else 1
+        _, _, iy_ext, ix_ext = layer.in_shape
+        total_out = layer.out_elems
+        layer_macs = layer.macs
+
+        for rank in range(n_cn):
+            # decode row-major multi-index
+            idx, rem = [], rank
+            for g in reversed(grid):
+                idx.append(rem % g)
+                rem //= g
+            idx = tuple(reversed(idx))
+
+            out_ranges: list[tuple[str, int, int]] = [
+                ("B", 0, layer.d("B")), ("K", 0, layer.d("K")),
+            ]
+            frac = 1.0
+            per_dim_rng: dict[str, tuple[int, int]] = {}
+            for d, i in zip(dims, idx):
+                a, b = ranges_per_dim[d][i]
+                per_dim_rng[d] = (a, b)
+                out_ranges.append((d, a, b))
+                frac *= (b - a) / layer.d(d)
+            for d in SPLITTABLE:
+                if d not in per_dim_rng:
+                    out_ranges.append((d, 0, layer.d(d)))
+                    per_dim_rng[d] = (0, layer.d(d))
+            out_rect = Rect(tuple(out_ranges))
+
+            # input rect per producer operand (in the producer's OUTPUT space)
+            iy = _receptive(per_dim_rng["OY"], layer.stride, layer.d("FY"), layer.padding, iy_ext)
+            ix = _receptive(per_dim_rng["OX"], layer.stride, layer.d("FX"), layer.padding, ix_ext)
+            in_rects: dict[int, Rect] = {}
+            producers = layer.inputs if layer.inputs else (-1,)
+            ch_off = 0
+            for p in producers:
+                if layer.op == "concat":
+                    pk = workload.layers[p].d("K") if p >= 0 else layer.d("C")
+                    in_rects[p] = Rect((("B", 0, layer.d("B")), ("K", 0, pk),
+                                        ("OY", iy[0], iy[1]), ("OX", ix[0], ix[1])))
+                    ch_off += pk
+                    continue
+                if layer.op in ("dwconv", "pool", "add"):
+                    ch = per_dim_rng.get("K", (0, layer.d("K")))
+                    ka, kb = 0, layer.d("K")
+                else:  # conv / fc need all input channels
+                    ka, kb = 0, layer.d("C")
+                in_rects[p] = Rect((("B", 0, layer.d("B")), ("K", ka, kb),
+                                    ("OY", iy[0], iy[1]), ("OX", ix[0], ix[1])))
+
+            # ---- attribute extraction (paper Fig. 5) -----------------------
+            # exclusive input volume: Π_d extent-before-next-CN's-input-start
+            # fresh input volume:     Π_d extent-after-prev-CN's-input-stop
+            discardable = 0
+            fresh = 0
+            for p, rect in in_rects.items():
+                rd = rect.as_dict()
+                vol_excl = 1
+                vol_new = 1
+                for d, (a, b) in rd.items():
+                    ext_excl = ext_new = max(0, b - a)
+                    if d in dims:
+                        i = dims.index(d)
+                        pos = idx[i]
+                        fdim = "FY" if d == "OY" else "FX"
+                        in_ext = iy_ext if d == "OY" else ix_ext
+                        if pos + 1 < grid[i]:
+                            nxt = _receptive(ranges_per_dim[d][pos + 1], layer.stride,
+                                             layer.d(fdim), layer.padding, in_ext)
+                            ext_excl = max(0, min(b, nxt[0]) - a)
+                        if pos > 0:
+                            prv = _receptive(ranges_per_dim[d][pos - 1], layer.stride,
+                                             layer.d(fdim), layer.padding, in_ext)
+                            ext_new = max(0, b - max(a, prv[1]))
+                    vol_excl *= ext_excl
+                    vol_new *= ext_new
+                discardable += vol_excl
+                fresh += vol_new
+
+            macs = max(1, round(layer_macs * frac))
+            new_out = max(1, round(total_out * frac)) if total_out else 0
+
+            cns.append(CN(
+                id=len(cns), layer=lid, idx=idx, intra_rank=rank,
+                out_rect=out_rect, in_rects=in_rects, macs=macs,
+                discardable_inputs=discardable, new_inputs=fresh, new_outputs=new_out,
+                weight_bytes=layer.weight_bytes, in_bits=layer.bits, out_bits=layer.bits,
+            ))
+    return cns
+
+
+def cns_by_layer(cns: Sequence[CN]) -> dict[int, list[CN]]:
+    out: dict[int, list[CN]] = {}
+    for cn in cns:
+        out.setdefault(cn.layer, []).append(cn)
+    for lst in out.values():
+        lst.sort(key=lambda c: c.intra_rank)
+    return out

@@ -1,0 +1,50 @@
+"""Stream Step 3: intra-core mapping cost extraction with unique-CN caching.
+
+CNs of the same layer with equal loop extents map identically, so costs are
+cached by `CN.size_signature()` x core id (the paper extracts "all unique
+CN-core combinations"). The HW-model parser is modular: any object exposing
+`cn_cost(dims, op, core, bits)` can replace ZigZag-lite.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+from repro.core.cn import CN
+from repro.core.workload import Workload
+from repro.core.zigzag_lite import CNCost, cn_cost
+from repro.hw.accelerator import Accelerator
+
+INFEASIBLE = None
+
+
+class CostModel:
+    def __init__(self, workload: Workload, accelerator: Accelerator, cost_fn=cn_cost):
+        self.workload = workload
+        self.accelerator = accelerator
+        self.cost_fn = cost_fn
+        self._cache: dict[tuple, CNCost | None] = {}
+
+    def cn_dims(self, cn: CN) -> Mapping[str, int]:
+        layer = self.workload.layers[cn.layer]
+        rd = cn.out_rect.as_dict()
+        dims = {d: b - a for d, (a, b) in rd.items()}
+        for d in ("C", "FY", "FX"):
+            dims[d] = layer.d(d)
+        if layer.op in ("dwconv", "pool", "add", "concat"):
+            dims["C"] = 1
+        return dims
+
+    def cost(self, cn: CN, core_id: int) -> CNCost | None:
+        key = (cn.size_signature(), core_id)
+        hit = self._cache.get(key, False)
+        if hit is not False:
+            return hit
+        layer = self.workload.layers[cn.layer]
+        core = self.accelerator.cores[core_id]
+        out = self.cost_fn(self.cn_dims(cn), layer.op, core, layer.bits) \
+            if core.supports(layer.op) else INFEASIBLE
+        self._cache[key] = out
+        return out
+
+    def feasible_cores(self, cn: CN) -> list[int]:
+        return [i for i in range(self.accelerator.n_cores) if self.cost(cn, i) is not None]

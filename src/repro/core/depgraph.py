@@ -1,0 +1,94 @@
+"""Stream Step 2: fine-grained CN dependency-graph generation.
+
+Intra-layer edges follow the outer-CN loop order (rank i -> i+1), keeping
+tensor accesses implementable with loop counters. Inter-layer edges are found
+per producer/consumer layer pair by building an R-tree over the consumer CNs'
+required-input boxes and querying it with each producer CN's produced-output
+box (paper Fig. 6); edge weight = intersection volume in bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.cn import CN, Rect, cns_by_layer
+from repro.core.rtree import RTree, brute_force_query
+from repro.core.workload import Workload
+
+_DIMS = ("B", "K", "OY", "OX")
+
+
+def _rect_to_box(rect: Rect) -> np.ndarray:
+    rd = rect.as_dict()
+    return np.array([rd.get(d, (0, 1 << 40)) for d in _DIMS], dtype=np.int64)
+
+
+@dataclasses.dataclass
+class CNGraph:
+    """CN DAG with data-weighted edges. Edge bytes==0 marks pure ordering edges."""
+
+    cns: list[CN]
+    preds: list[list[int]]
+    succs: list[list[int]]
+    edge_bytes: dict[tuple[int, int], int]
+
+    def n_edges(self) -> int:
+        return len(self.edge_bytes)
+
+    def topo_ready_counts(self) -> np.ndarray:
+        return np.array([len(p) for p in self.preds], dtype=np.int64)
+
+
+def build_cn_graph(
+    workload: Workload,
+    cns: Sequence[CN],
+    *,
+    use_rtree: bool = True,
+) -> CNGraph:
+    by_layer = cns_by_layer(cns)
+    n = len(cns)
+    preds: list[list[int]] = [[] for _ in range(n)]
+    succs: list[list[int]] = [[] for _ in range(n)]
+    edge_bytes: dict[tuple[int, int], int] = {}
+
+    def add_edge(u: int, v: int, nbytes: int) -> None:
+        if (u, v) in edge_bytes:
+            edge_bytes[(u, v)] += nbytes
+            return
+        edge_bytes[(u, v)] = nbytes
+        succs[u].append(v)
+        preds[v].append(u)
+
+    # ---- intra-layer ordering edges ---------------------------------------
+    for layer_cns in by_layer.values():
+        for a, b in zip(layer_cns, layer_cns[1:]):
+            add_edge(a.id, b.id, 0)
+
+    # ---- inter-layer data edges (R-tree per producer/consumer pair) -------
+    for cons_lid, cons_layer in workload.layers.items():
+        cons_cns = by_layer[cons_lid]
+        for prod_lid in cons_layer.inputs:
+            prod_cns = by_layer[prod_lid]
+            cons_boxes = np.stack([_rect_to_box(c.in_rects[prod_lid]) for c in cons_cns])
+            bits = workload.layers[prod_lid].bits
+            if use_rtree and len(cons_cns) > 8:
+                tree = RTree(cons_boxes)
+                for p in prod_cns:
+                    pbox = _rect_to_box(p.out_rect)
+                    for ci in tree.query(pbox):
+                        c = cons_cns[int(ci)]
+                        vol = p.out_rect.intersection_volume(c.in_rects[prod_lid])
+                        if vol > 0:
+                            add_edge(p.id, c.id, vol * bits // 8)
+            else:  # brute force (paper's baseline; kept for tests/benches)
+                for p in prod_cns:
+                    pbox = _rect_to_box(p.out_rect)
+                    for ci in brute_force_query(cons_boxes, pbox):
+                        c = cons_cns[int(ci)]
+                        vol = p.out_rect.intersection_volume(c.in_rects[prod_lid])
+                        if vol > 0:
+                            add_edge(p.id, c.id, vol * bits // 8)
+
+    return CNGraph(cns=list(cns), preds=preds, succs=succs, edge_bytes=edge_bytes)

@@ -1,0 +1,198 @@
+"""Stream Step 4 substrate: NSGA-II genetic algorithm (Deb et al. [7]).
+
+Genome: integer vector, gene g = core id allocated to allocatable unit g
+(a layer in the reproduction; a layer-block in the TPU planner). Operators
+per the paper: ordered (segment) crossover with p=0.3; mutation with p=0.7,
+choosing uniformly between a bit flip (re-allocate one unit to a different
+feasible core) and a position flip (swap two units' allocations). Selection
+is NSGA-II: fast non-dominated sorting + crowding distance, which spreads the
+surviving individuals over the Pareto front. Fitness values are memoized by
+genome bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II machinery
+# ---------------------------------------------------------------------------
+
+def fast_nondominated_sort(objs: np.ndarray) -> list[np.ndarray]:
+    """objs: (N, M) minimization objectives -> list of fronts (index arrays)."""
+    n = objs.shape[0]
+    # dominated[i,j] = i dominates j
+    le = np.all(objs[:, None, :] <= objs[None, :, :], axis=2)
+    lt = np.any(objs[:, None, :] < objs[None, :, :], axis=2)
+    dom = le & lt
+    n_dominators = dom.sum(axis=0)
+    fronts: list[np.ndarray] = []
+    remaining = np.arange(n)
+    counts = n_dominators.copy()
+    while remaining.size:
+        mask = counts[remaining] == 0
+        front = remaining[mask]
+        if front.size == 0:  # numerical tie safety
+            front = remaining[counts[remaining] == counts[remaining].min()]
+        fronts.append(front)
+        remaining = np.setdiff1d(remaining, front, assume_unique=True)
+        if remaining.size:
+            counts[remaining] -= dom[np.ix_(front, remaining)].sum(axis=0)
+    return fronts
+
+
+def crowding_distance(objs: np.ndarray) -> np.ndarray:
+    n, m = objs.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    dist = np.zeros(n)
+    for k in range(m):
+        order = np.argsort(objs[:, k], kind="stable")
+        lo, hi = objs[order[0], k], objs[order[-1], k]
+        dist[order[0]] = dist[order[-1]] = np.inf
+        if hi > lo:
+            dist[order[1:-1]] += (objs[order[2:], k] - objs[order[:-2], k]) / (hi - lo)
+    return dist
+
+
+# ---------------------------------------------------------------------------
+# GA driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GAResult:
+    pareto_genomes: np.ndarray        # (P, G)
+    pareto_objs: np.ndarray           # (P, M)
+    best_genome: np.ndarray           # scalarized best (first objective product)
+    best_objs: np.ndarray
+    history: list[float]              # best scalarized fitness per generation
+    evaluations: int = 0
+
+
+class GeneticAllocator:
+    def __init__(
+        self,
+        n_genes: int,
+        feasible_cores: Sequence[Sequence[int]],   # per gene
+        evaluate: Callable[[np.ndarray], tuple[float, ...]],
+        *,
+        pop_size: int = 32,
+        generations: int = 24,
+        crossover_p: float = 0.3,
+        mutation_p: float = 0.7,
+        scalarize: Callable[[np.ndarray], float] | None = None,
+        seed: int = 0,
+        patience: int = 8,
+    ):
+        self.n_genes = n_genes
+        self.feasible = [np.asarray(f, dtype=np.int64) for f in feasible_cores]
+        if any(f.size == 0 for f in self.feasible):
+            raise ValueError("a gene has no feasible core")
+        self.evaluate = evaluate
+        self.pop_size = max(4, pop_size)
+        self.generations = generations
+        self.crossover_p = crossover_p
+        self.mutation_p = mutation_p
+        # default scalarization: product of objectives (latency*energy = EDP)
+        self.scalarize = scalarize or (lambda o: float(np.prod(o)))
+        self.rng = np.random.default_rng(seed)
+        self.patience = patience
+        self._cache: dict[bytes, tuple[float, ...]] = {}
+        self.evaluations = 0
+
+    # ---- operators ---------------------------------------------------------
+    def _random_genome(self) -> np.ndarray:
+        return np.array([f[self.rng.integers(f.size)] for f in self.feasible])
+
+    def _crossover(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """Ordered (two-point segment) crossover on the allocation vector."""
+        child = a.copy()
+        i, j = sorted(self.rng.integers(0, self.n_genes, size=2))
+        child[i:j + 1] = b[i:j + 1]
+        return child
+
+    def _mutate(self, g: np.ndarray) -> np.ndarray:
+        g = g.copy()
+        if self.rng.random() < 0.5 or self.n_genes < 2:
+            # bit flip: allocate one unit to a different feasible core
+            i = int(self.rng.integers(self.n_genes))
+            opts = self.feasible[i]
+            if opts.size > 1:
+                choices = opts[opts != g[i]]
+                g[i] = choices[self.rng.integers(choices.size)]
+        else:
+            # position flip: swap two units' allocations (if mutually feasible)
+            i, j = self.rng.integers(0, self.n_genes, size=2)
+            if g[j] in self.feasible[i] and g[i] in self.feasible[j]:
+                g[i], g[j] = g[j], g[i]
+        return g
+
+    def _eval(self, g: np.ndarray) -> tuple[float, ...]:
+        key = g.tobytes()
+        hit = self._cache.get(key)
+        if hit is None:
+            hit = tuple(float(x) for x in self.evaluate(g))
+            self._cache[key] = hit
+            self.evaluations += 1
+        return hit
+
+    # ---- main loop ---------------------------------------------------------
+    def run(self, initial: Sequence[np.ndarray] = ()) -> GAResult:
+        pop = [np.asarray(g) for g in initial][: self.pop_size]
+        while len(pop) < self.pop_size:
+            pop.append(self._random_genome())
+        objs = np.array([self._eval(g) for g in pop])
+        history: list[float] = []
+        stale = 0
+        for _ in range(self.generations):
+            # ---- variation: tournament parents -> offspring -----------------
+            offspring = []
+            while len(offspring) < self.pop_size:
+                i, j = self.rng.integers(0, len(pop), size=2)
+                parent = pop[i] if self.scalarize(objs[i]) <= self.scalarize(objs[j]) else pop[j]
+                child = parent.copy()
+                if self.rng.random() < self.crossover_p:
+                    mate = pop[int(self.rng.integers(len(pop)))]
+                    child = self._crossover(child, mate)
+                if self.rng.random() < self.mutation_p:
+                    child = self._mutate(child)
+                offspring.append(child)
+            # ---- NSGA-II environmental selection on parents+offspring -------
+            union = pop + offspring
+            uobjs = np.array([self._eval(g) for g in union])
+            fronts = fast_nondominated_sort(uobjs)
+            survivors: list[int] = []
+            for front in fronts:
+                if len(survivors) + front.size <= self.pop_size:
+                    survivors.extend(front.tolist())
+                else:
+                    cd = crowding_distance(uobjs[front])
+                    order = front[np.argsort(-cd, kind="stable")]
+                    survivors.extend(order[: self.pop_size - len(survivors)].tolist())
+                    break
+            pop = [union[i] for i in survivors]
+            objs = uobjs[survivors]
+            best = min(self.scalarize(o) for o in objs)
+            if history and best >= history[-1] - 1e-12:
+                stale += 1
+            else:
+                stale = 0
+            history.append(best)
+            if stale >= self.patience:  # "after the desired metric saturates"
+                break
+        # ---- results -------------------------------------------------------
+        fronts = fast_nondominated_sort(objs)
+        pareto = fronts[0]
+        scal = np.array([self.scalarize(o) for o in objs])
+        best_i = int(np.argmin(scal))
+        return GAResult(
+            pareto_genomes=np.stack([pop[i] for i in pareto]),
+            pareto_objs=objs[pareto],
+            best_genome=pop[best_i].copy(),
+            best_objs=objs[best_i].copy(),
+            history=history,
+            evaluations=self.evaluations,
+        )

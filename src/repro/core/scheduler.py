@@ -1,0 +1,335 @@
+"""Stream Step 5.1: multi-core CN scheduling.
+
+Event-list scheduler over the fine-grained CN graph. Resources:
+  * each core (free-from time),
+  * the shared inter-core communication bus — a *communication node* is
+    inserted for every producer->consumer edge crossing cores; the bus serves
+    nodes first-come-first-serve (contention),
+  * the shared off-chip DRAM port — *off-chip access nodes* model weight
+    fetches (with FIFO eviction from the core's weight memory), first-layer
+    input activations, and activation spills when a core's activation memory
+    overflows, all FCFS on the port.
+
+Two candidate-selection priorities (paper Fig. 8):
+  * 'latency': pick the candidate whose predecessors finished earliest
+    (its data has waited in memory the longest) -> maximizes core utilization;
+  * 'memory' : pick the candidate from the deepest layer -> consume data as
+    deep into the fused stack as possible for early discarding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import OrderedDict
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.core.depgraph import CNGraph
+from repro.hw.accelerator import Accelerator
+
+PREFETCH_DEPTH = 4.0  # external-input staging depth (quad-buffered prefetch)
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    latency_cc: float
+    energy_pj: float
+    energy_breakdown: dict[str, float]
+    peak_mem_bytes: float           # activations + resident weights
+    act_peak_bytes: float           # activations only (paper Step 5.2 trace)
+    mem_events: list[tuple[float, float, int, str]]  # (time, +/- bytes, core, kind)
+    core_intervals: list[list[tuple[float, float, int]]]  # per core: (start, end, cn)
+    comm_intervals: list[tuple[float, float, int, int, int]]  # (s, e, u, v, bytes)
+    dram_intervals: list[tuple[float, float, str, int]]       # (s, e, kind, bytes)
+    core_busy: np.ndarray
+
+    @property
+    def edp(self) -> float:
+        return self.latency_cc * self.energy_pj
+
+    def utilization(self) -> np.ndarray:
+        return self.core_busy / max(self.latency_cc, 1.0)
+
+
+def compute_segments(workload, allocation, accelerator) -> np.ndarray:
+    """Partition layers into fused stacks bounded by on-core weight capacity.
+
+    Depth-first interleaving across layers whose combined weights exceed the
+    allocated cores' weight memories would thrash the FIFO (refetching weights
+    once per CN band). Real depth-first systems (DepFiN [15], DeFiNES [27],
+    TVM cascading [37]) bound each fused stack so its weights stay resident;
+    we do the same: greedy topological cut whenever a core's accumulated
+    weight footprint would overflow. Layers whose weights alone exceed the
+    capacity get their own stack (weights stream exactly once).
+    """
+    alloc = np.asarray(allocation, dtype=np.int64)
+    acc_w: dict[int, float] = {}
+    seg = 0
+    seg_of = np.zeros(len(workload.layers), dtype=np.int64)
+    for lid, layer in workload.layers.items():
+        core = int(alloc[lid])
+        cap = accelerator.cores[core].weight_mem_bytes
+        wb = layer.weight_bytes
+        if wb > 0 and cap > 0:
+            hold = min(wb, cap)
+            if acc_w.get(core, 0.0) + hold > cap and acc_w.get(core, 0.0) > 0:
+                seg += 1
+                acc_w = {}
+            acc_w[core] = acc_w.get(core, 0.0) + hold
+        seg_of[lid] = seg
+    return seg_of
+
+
+def schedule(
+    graph: CNGraph,
+    cost_model: CostModel,
+    allocation: Sequence[int],        # layer id -> core id
+    accelerator: Accelerator,
+    priority: str = "latency",
+    segment: bool = True,             # fused-stack segmentation (see above)
+    strict_layers: bool = False,      # traditional LBL: barrier after every layer
+) -> ScheduleResult:
+    cns = graph.cns
+    n = len(cns)
+    alloc = np.asarray(allocation, dtype=np.int64)
+    core_of = np.array([alloc[cn.layer] for cn in cns], dtype=np.int64)
+    if strict_layers:
+        seg_of_layer = np.arange(len(cost_model.workload.layers), dtype=np.int64)
+    elif segment:
+        seg_of_layer = compute_segments(cost_model.workload, alloc, accelerator)
+    else:
+        seg_of_layer = np.zeros(len(cost_model.workload.layers), dtype=np.int64)
+    seg_of = seg_of_layer[[cn.layer for cn in cns]]
+    seg_barrier: dict[int, float] = {0: 0.0}
+    frontier = 0.0  # max finish time over everything scheduled so far
+
+    core_free = np.zeros(accelerator.n_cores)
+    core_busy = np.zeros(accelerator.n_cores)
+    bus_free = 0.0
+    dram_free = 0.0
+    finish = np.zeros(n)
+    started = np.zeros(n, dtype=bool)
+
+    # per-core memory state; shared-L1 architectures pool all activation
+    # capacity into one space (index 0) that every core addresses
+    shared_l1 = accelerator.comm_style == "shared_mem"
+    if shared_l1:
+        act_cap = np.zeros(accelerator.n_cores)
+        act_cap[0] = sum(c.act_mem_bytes for c in accelerator.cores)
+    else:
+        act_cap = np.array([c.act_mem_bytes for c in accelerator.cores], dtype=np.float64)
+    act_used = np.zeros(accelerator.n_cores)
+    w_cap = [c.weight_mem_bytes for c in accelerator.cores]
+    resident: list[OrderedDict[int, int]] = [OrderedDict() for _ in accelerator.cores]
+    resident_used = np.zeros(accelerator.n_cores)
+
+    # fresh-byte bookkeeping: a producer CN's output is shipped to a given core
+    # at most once (consumers on that core share the landed data)
+    sent_to: dict[tuple[int, int], float] = {}      # (cn, core) -> arrival time
+    remaining_new: dict[tuple[int, int], int] = {}  # (cn, core) -> bytes left to ship
+    spilled: dict[int, float] = {}                  # cn -> bytes pushed to DRAM
+
+    energy = {"compute": 0.0, "sram": 0.0, "bus": 0.0, "dram": 0.0}
+    mem_events: list[tuple[float, float, int, str]] = []
+    core_intervals: list[list[tuple[float, float, int]]] = [[] for _ in accelerator.cores]
+    comm_intervals: list[tuple[float, float, int, int, int]] = []
+    dram_intervals: list[tuple[float, float, str, int]] = []
+
+    bus_bw = accelerator.bus_bw_bits_per_cc
+    dram_bw = accelerator.dram_bw_bits_per_cc
+
+    def dram_xfer(nbytes: float, kind: str, earliest: float = 0.0) -> float:
+        """Schedule an off-chip access node; returns completion time."""
+        nonlocal dram_free
+        if nbytes <= 0:
+            return earliest
+        start = max(dram_free, earliest)
+        dur = nbytes * 8.0 / dram_bw
+        dram_free = start + dur
+        energy["dram"] += nbytes * 8.0 * accelerator.dram_energy_pj_per_bit
+        dram_intervals.append((start, start + dur, kind, int(nbytes)))
+        return start + dur
+
+    def alloc_act(core: int, nbytes: float, t: float, producer_cn: int) -> None:
+        """Allocate activation bytes on a core; overflow spills to DRAM."""
+        if nbytes <= 0:
+            return
+        if shared_l1:
+            core = 0
+        free = act_cap[core] - act_used[core]
+        kept = min(nbytes, max(free, 0.0))
+        overflow = nbytes - kept
+        act_used[core] += kept
+        mem_events.append((t, kept, core, "act"))
+        if overflow > 0:
+            spilled[producer_cn] = spilled.get(producer_cn, 0.0) + overflow
+            dram_xfer(overflow, "spill_w", t)
+
+    def free_act(core: int, nbytes: float, t: float) -> None:
+        if nbytes <= 0:
+            return
+        if shared_l1:
+            core = 0
+        rel = min(nbytes, act_used[core])
+        act_used[core] -= rel
+        mem_events.append((t, -rel, core, "act"))
+
+    # ---- candidate pool -----------------------------------------------------
+    indeg = np.array([len(p) for p in graph.preds], dtype=np.int64)
+    heap: list[tuple[float, int, int, int]] = []
+    counter = 0
+
+    def push(i: int) -> None:
+        nonlocal counter
+        cn = cns[i]
+        if priority == "latency":
+            key = max((finish[u] for u in graph.preds[i]), default=0.0)
+        elif priority == "memory":
+            key = -float(cn.layer)
+        else:
+            raise ValueError(f"unknown priority {priority!r}")
+        # fused stacks execute in order: segment id is the primary key
+        heapq.heappush(heap, (int(seg_of[i]), key, cn.layer, cn.intra_rank, i))
+        counter += 1
+
+    for i in range(n):
+        if indeg[i] == 0:
+            push(i)
+
+    scheduled = 0
+    while heap:
+        _, _, _, _, i = heapq.heappop(heap)
+        cn = cns[i]
+        core = int(core_of[i])
+        seg = int(seg_of[i])
+        if seg not in seg_barrier:
+            seg_barrier[seg] = frontier  # stack barrier: previous stack done
+        cost = cost_model.cost(cn, core)
+        if cost is None:
+            raise ValueError(
+                f"CN of layer {cn.layer} allocated to incompatible core {core}")
+
+        # ---- incoming data: communication + spill readback ----------------
+        data_ready = 0.0
+        nonlocal_bus = 0.0
+        for u in graph.preds[i]:
+            e_bytes = graph.edge_bytes[(u, i)]
+            u_core = int(core_of[u])
+            if u_core == core or e_bytes == 0 or accelerator.comm_style == "shared_mem":
+                # same core, pure ordering edge, or shared-L1 architecture
+                # (DIANA-style): both cores address one copy, no transfer node
+                data_ready = max(data_ready, finish[u])
+            else:
+                key = (u, core)
+                if key in sent_to:
+                    data_ready = max(data_ready, sent_to[key])
+                else:
+                    rem = remaining_new.get((u, -1))
+                    if rem is None:
+                        rem = cns[u].out_bytes
+                    fresh = min(e_bytes, rem)
+                    remaining_new[(u, -1)] = rem - fresh
+                    start = max(bus_free, finish[u])
+                    dur = fresh * 8.0 / bus_bw
+                    bus_free = start + dur
+                    energy["bus"] += fresh * 8.0 * accelerator.bus_energy_pj_per_bit
+                    comm_intervals.append((start, start + dur, u, i, int(fresh)))
+                    # consumer allocates at comm start; producer frees at comm end
+                    alloc_act(core, fresh, start, u)
+                    free_act(u_core, fresh, start + dur)
+                    sent_to[key] = start + dur
+                    data_ready = max(data_ready, start + dur)
+                    nonlocal_bus = max(nonlocal_bus, start + dur)
+            # spilled producer data must be read back through the DRAM port
+            sp = spilled.get(u, 0.0)
+            if sp > 0:
+                share = min(sp, e_bytes)
+                data_ready = max(data_ready, dram_xfer(share, "spill_r", finish[u]))
+
+        # ---- first-layer external inputs fetched via DRAM port -------------
+        # just-in-time prefetch: no earlier than needed for the core frontier,
+        # so inputs do not pile up in on-chip memory (double-buffered fetch)
+        layer = cost_model.workload.layers[cn.layer]
+        if not layer.inputs:
+            nbytes = cn.new_inputs * cn.in_bits / 8.0
+            dur = nbytes * 8.0 / dram_bw
+            done = dram_xfer(nbytes, "input", max(0.0, core_free[core] - dur * PREFETCH_DEPTH))
+            alloc_act(core, nbytes, done, i)
+            data_ready = max(data_ready, done)
+
+        # ---- weights: on-core residency with FIFO eviction ------------------
+        # Oversized layers (weights > weight memory) stream double-buffered and
+        # occupy the full buffer while the core keeps processing that layer;
+        # the full fetch cost recurs only when residency is lost (interleaving
+        # with another weight-hungry layer on the same core = thrashing).
+        weight_ready = 0.0
+        wb = cn.weight_bytes
+        if wb > 0:
+            hold = min(wb, w_cap[core]) if w_cap[core] > 0 else 0
+            if cn.layer not in resident[core]:
+                evicted_bytes = 0
+                while resident_used[core] + hold > w_cap[core] and resident[core]:
+                    _, evicted = resident[core].popitem(last=False)  # FIFO
+                    resident_used[core] -= evicted
+                    evicted_bytes += evicted
+                resident[core][cn.layer] = hold
+                resident_used[core] += hold
+                kind = "weight" if wb <= w_cap[core] else "weight_stream"
+                weight_ready = dram_xfer(wb, kind, 0.0)
+                # weights occupy on-chip SRAM (AiMC weights live in the array)
+                if accelerator.cores[core].core_type != "aimc" and hold > 0:
+                    mem_events.append((weight_ready, float(hold), core, "weight"))
+                    if evicted_bytes:
+                        mem_events.append((weight_ready, -float(evicted_bytes), core, "weight"))
+
+        # ---- execute --------------------------------------------------------
+        start = max(core_free[core], data_ready, weight_ready, seg_barrier[seg])
+        end = start + cost.cycles
+        core_free[core] = end
+        core_busy[core] += cost.cycles
+        finish[i] = end
+        frontier = max(frontier, end)
+        started[i] = True
+        core_intervals[core].append((start, end, i))
+        energy["compute"] += cost.breakdown["compute"]
+        energy["sram"] += (cost.breakdown["sram_act"] + cost.breakdown["sram_w"])
+
+        # memory trace: outputs allocated at start, exclusive inputs freed at end
+        alloc_act(core, cn.out_bytes, start, i)
+        free_act(core, cn.discardable_inputs * cn.in_bits / 8.0, end)
+
+        scheduled += 1
+        for v in graph.succs[i]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                push(v)
+
+    if scheduled != n:
+        raise RuntimeError(f"scheduled {scheduled}/{n} CNs: dependency cycle?")
+
+    latency = float(max(
+        finish.max() if n else 0.0,
+        max((e for _, e, *_ in comm_intervals), default=0.0),
+        max((e for _, e, *_ in dram_intervals), default=0.0),
+    ))
+    total_e = float(sum(energy.values()))
+
+    # ---- Step 5.2: activation memory usage trace ----------------------------
+    from repro.core.memtrace import peak_memory
+    peak = peak_memory(mem_events)
+    act_peak = peak_memory(mem_events, kind="act")
+
+    return ScheduleResult(
+        latency_cc=latency,
+        energy_pj=total_e,
+        energy_breakdown=dict(energy),
+        peak_mem_bytes=peak,
+        act_peak_bytes=act_peak,
+        mem_events=mem_events,
+        core_intervals=core_intervals,
+        comm_intervals=comm_intervals,
+        dram_intervals=dram_intervals,
+        core_busy=core_busy,
+    )

@@ -1,0 +1,155 @@
+"""Stream: one-call design-space-exploration entry point (paper Fig. 3).
+
+    result = explore(workload, accelerator, granularity="line",
+                     objective="edp", priority="latency")
+
+runs Steps 1-5: CN identification (HW-dataflow-aware minimum tiles), R-tree
+dependency generation, intra-core cost extraction, GA layer-core allocation
+(NSGA-II on [latency, energy]), and prioritized multi-core scheduling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.allocator import feasible_cores_per_layer
+from repro.core.cn import identify_cns
+from repro.core.costmodel import CostModel
+from repro.core.depgraph import CNGraph, build_cn_graph
+from repro.core.ga import GAResult, GeneticAllocator
+from repro.core.scheduler import ScheduleResult, schedule
+from repro.core.workload import Workload
+from repro.hw.accelerator import Accelerator
+
+
+def hw_min_tiles(accelerator: Accelerator) -> dict[str, int]:
+    """HW-dataflow awareness: CNs minimally encompass every dim spatially
+    unrolled in any core (paper Sec. III-A principle 2)."""
+    out: dict[str, int] = {}
+    for core in accelerator.cores:
+        for dim, u in core.dataflow:
+            if dim in ("OY", "OX"):
+                out[dim] = max(out.get(dim, 1), u)
+    return out
+
+
+@dataclasses.dataclass
+class StreamResult:
+    schedule: ScheduleResult
+    allocation: np.ndarray
+    ga: GAResult | None
+    graph: CNGraph
+    runtime_s: float
+    granularity: object
+
+    @property
+    def latency_cc(self) -> float:
+        return self.schedule.latency_cc
+
+    @property
+    def energy_pj(self) -> float:
+        return self.schedule.energy_pj
+
+    @property
+    def edp(self) -> float:
+        return self.schedule.edp
+
+    @property
+    def peak_mem_bytes(self) -> float:
+        return self.schedule.peak_mem_bytes
+
+
+def build_graph(workload: Workload, accelerator: Accelerator, granularity,
+                use_rtree: bool = True) -> CNGraph:
+    cns = identify_cns(workload, granularity, hw_min_tiles(accelerator))
+    return build_cn_graph(workload, cns, use_rtree=use_rtree)
+
+
+def evaluate_allocation(
+    workload: Workload,
+    accelerator: Accelerator,
+    allocation,
+    granularity="line",
+    priority: str = "latency",
+    graph: CNGraph | None = None,
+) -> ScheduleResult:
+    """Schedule a fixed layer-core allocation (used by validation benches)."""
+    graph = graph or build_graph(workload, accelerator, granularity)
+    cm = CostModel(workload, accelerator)
+    # 'layer' granularity == traditional layer-by-layer: strictly sequential
+    return schedule(graph, cm, np.asarray(allocation), accelerator, priority,
+                    strict_layers=(granularity == "layer"))
+
+
+def explore(
+    workload: Workload,
+    accelerator: Accelerator,
+    granularity="line",
+    objective: str = "edp",            # 'edp' | 'latency' | 'energy'
+    priority: str = "latency",
+    pop_size: int = 24,
+    generations: int = 16,
+    seed: int = 0,
+    initial_allocations=(),
+) -> StreamResult:
+    t0 = time.perf_counter()
+    graph = build_graph(workload, accelerator, granularity)
+    cm = CostModel(workload, accelerator)
+    feas = feasible_cores_per_layer(workload, accelerator)
+
+    strict = granularity == "layer"  # traditional LBL: no cross-layer overlap
+
+    def evaluate(genome: np.ndarray) -> tuple[float, float]:
+        res = schedule(graph, cm, genome, accelerator, priority,
+                       strict_layers=strict)
+        return (res.latency_cc, res.energy_pj)
+
+    scalarize = {
+        "edp": lambda o: float(o[0] * o[1]),
+        "latency": lambda o: float(o[0]),
+        "energy": lambda o: float(o[1]),
+    }[objective]
+
+    if len(workload) == 1 or all(len(f) == 1 for f in feas):
+        alloc = np.array([f[0] for f in feas])
+        ga_res = None
+    else:
+        ga = GeneticAllocator(
+            n_genes=len(workload), feasible_cores=feas, evaluate=evaluate,
+            pop_size=pop_size, generations=generations, scalarize=scalarize,
+            seed=seed,
+        )
+        ga_res = ga.run(initial=initial_allocations)
+        alloc = ga_res.best_genome
+
+    final = schedule(graph, cm, alloc, accelerator, priority,
+                     strict_layers=(granularity == "layer"))
+    return StreamResult(
+        schedule=final, allocation=alloc, ga=ga_res, graph=graph,
+        runtime_s=time.perf_counter() - t0, granularity=granularity,
+    )
+
+
+def explore_granularity(
+    workload: Workload,
+    accelerator: Accelerator,
+    granularities=("layer", ("tile", 8, 1), ("tile", 16, 1), ("tile", 32, 1),
+                   ("tile", 64, 1)),
+    objective: str = "edp",
+    **kw,
+) -> dict:
+    """Co-explore scheduling granularity with allocation (paper Sec. V
+    summary: "quantitatively and automatically co-explore the optimal
+    scheduling granularity"). Returns {granularity: StreamResult} plus the
+    objective-best key under 'best'."""
+    results: dict = {}
+    for g in granularities:
+        key = g if isinstance(g, str) else f"tile{g[1]}x{g[2]}"
+        results[key] = explore(workload, accelerator, granularity=g,
+                               objective=objective, **kw)
+    metric = {"edp": lambda r: r.edp, "latency": lambda r: r.latency_cc,
+              "energy": lambda r: r.energy_pj}[objective]
+    results["best"] = min((k for k in results), key=lambda k: metric(results[k]))
+    return results

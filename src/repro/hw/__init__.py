@@ -1,0 +1,4 @@
+from repro.hw.core_model import CoreModel, cacti_like_energy_pj_per_bit
+from repro.hw.accelerator import Accelerator
+
+__all__ = ["CoreModel", "Accelerator", "cacti_like_energy_pj_per_bit"]

@@ -1,0 +1,88 @@
+"""Pallas TPU split-KV decode attention (FlashDecoding-style).
+
+One query token per (batch, head); the KV cache is processed in blocks along
+its sequence dim (grid innermost), carrying partial online-softmax state in
+VMEM scratch. Invalid cache positions (>= cur_len, passed via scalar
+prefetch) are masked. The split-KV structure is what the distributed
+decode path (models.layers.decode_attention_kv_sharded) mirrors across
+chips: same math, partials merged by collectives instead of scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, bk: int, scale: float, nk: int):
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(F32)                       # (1, d)
+    k = k_ref[0].astype(F32)                       # (bk, d)
+    v = v_ref[0].astype(F32)                       # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale  # (1, bk)
+    pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, cur_len, *, block_kv: int = 512,
+                         interpret: bool = False):
+    """q: (B,H,D); k,v: (B,H,T,D); cur_len: scalar int32 -> (B,H,D)."""
+    B, H, D = q.shape
+    T = k.shape[2]
+    bk = min(block_kv, T)
+    assert T % bk == 0
+    nk = T // bk
+    qr = q.reshape(B * H, 1, D)
+    kr = k.reshape(B * H, T, D)
+    vr = v.reshape(B * H, T, D)
+    lens = jnp.full((1,), cur_len, jnp.int32)
+    kernel = functools.partial(_decode_kernel, bk=bk,
+                               scale=1.0 / math.sqrt(D), nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # cur_len scalar
+            pl.BlockSpec((1, 1, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), F32),
+            pltpu.VMEM((1,), F32),
+            pltpu.VMEM((1, D), F32),
+        ],
+        interpret=interpret,
+    )(lens, qr, kr, vr)
+    return out.reshape(B, H, D)

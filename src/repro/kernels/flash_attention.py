@@ -1,0 +1,101 @@
+"""Pallas TPU flash-attention forward kernel (FlashAttention-2 style).
+
+Grid: (batch*heads, q_blocks, kv_blocks) — kv innermost so the online-softmax
+state (m, l, acc) lives in VMEM scratch across kv steps; the output block is
+written on the last kv step. Block shapes are MXU-aligned (multiples of 128
+in the model configs; tests sweep smaller shapes in interpret mode).
+
+Causal handling: kv blocks strictly above the diagonal contribute nothing;
+they are masked, and (on TPU) skipped via `pl.when` so the MXU work for the
+upper triangle is not issued — the Pallas analogue of the paper's
+"HW dataflow awareness" for the CN granularity (block shape) choice.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, causal: bool, scale: float, nk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        q = q_ref[0].astype(F32)                    # (bq, d)
+        k = k_ref[0].astype(F32)                    # (bk, d)
+        v = v_ref[0].astype(F32)                    # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip kv blocks strictly above the diagonal
+        pl.when(kj * bk <= qi * bq + bq - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True, block_q: int = 256,
+                        block_kv: int = 256, interpret: bool = False):
+    """q: (B,H,S,D); k,v: (B,H,T,D) -> (B,H,S,D)."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    bq = min(block_q, S)
+    bk = min(block_kv, T)
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    nq, nk = S // bq, T // bk
+    qr = q.reshape(B * H, S, D)
+    kr = k.reshape(B * H, T, D)
+    vr = v.reshape(B * H, T, D)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal,
+        scale=1.0 / math.sqrt(D), nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), F32),        # running max
+            pltpu.VMEM((bq,), F32),        # running denominator
+            pltpu.VMEM((bq, D), F32),      # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,60 @@
+"""Pallas grouped expert GEMM (capacity layout).
+
+Tokens are pre-arranged into per-expert capacity buffers x: (E, C, K); each
+expert e multiplies its buffer by its weight w[e]: (K, N). Grid is
+(E, C/bm, N/bn, K/bk) with a VMEM fp32 accumulator carried across the
+contraction dim — the Pallas analogue of MegaBlocks' grouped GEMM under a
+fixed-capacity dispatch (the runtime sort+ragged_dot path in
+models.layers.moe_ffn is the capacity-free twin).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _moe_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(F32)          # (bm, bk)
+    w = w_ref[0].astype(F32)          # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+
+    @pl.when(kk == nk - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gemm(x, w, *, block_m: int = 128, block_n: int = 128,
+             block_k: int = 128, interpret: bool = False):
+    """x: (E, C, K); w: (E, K, N) -> (E, C, N)."""
+    E, C, K = x.shape
+    N = w.shape[-1]
+    bm = min(block_m, C)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    assert C % bm == 0 and N % bn == 0 and K % bk == 0, (C, N, K, bm, bn, bk)
+    out = pl.pallas_call(
+        functools.partial(_moe_kernel, nk=K // bk),
+        grid=(E, C // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, C, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), F32)],
+        interpret=interpret,
+    )(x, w)
+    return out

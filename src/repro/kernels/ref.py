@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth
+swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q: (B,H,S,D); k,v: (B,H,T,D) -> (B,H,S,D). Naive softmax attention."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(F32), k.astype(F32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(F32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cur_len):
+    """q: (B,H,D); k,v: (B,H,T,D); valid positions < cur_len."""
+    B, H, D = q.shape
+    T = k.shape[2]
+    s = jnp.einsum("bhd,bhtd->bht", q.astype(F32), k.astype(F32)) / math.sqrt(D)
+    s = jnp.where(jnp.arange(T)[None, None] < cur_len, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,bhtd->bhd", p, v.astype(F32)).astype(q.dtype)
+
+
+def moe_gemm_ref(x, w):
+    """Capacity-layout grouped GEMM. x: (E,C,K); w: (E,K,N) -> (E,C,N)."""
+    return jnp.einsum("eck,ekn->ecn", x.astype(F32),
+                      w.astype(F32)).astype(x.dtype)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(F32)).astype(x.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Per-token SSD recurrence (see models.ssm.ssd_scan_oracle).
+
+    x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm,Cm: (B,S,N) -> y (B,S,H,P)."""
+    from repro.models.ssm import ssd_scan_oracle
+    y, _ = ssd_scan_oracle(x, dt, A, Bm, Cm)
+    return y
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """Per-token RWKV6 recurrence (see models.rwkv.rwkv6_scan_oracle)."""
+    from repro.models.rwkv import rwkv6_scan_oracle
+    o, _ = rwkv6_scan_oracle(r, k, v, logw, u)
+    return o

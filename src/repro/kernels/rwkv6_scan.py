@@ -1,0 +1,86 @@
+"""Pallas RWKV6 chunked-scan kernel (data-dependent per-channel decay).
+
+Grid: (B, H, n_chunks), chunk innermost; the (K x V) wkv state is VMEM
+scratch carried across chunks. The intra-chunk causal part uses the direct
+(L, L, K) decay tensor — every exponent is <= 0, so no factored-exp overflow
+(see models.rwkv.rwkv6_chunked); with L=32, K<=128 the tile stays VMEM-sized
+(L*L*K*4B = 512 KB at K=128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, L: int):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0, 0].astype(F32)       # (L, K)
+    k = k_ref[0, 0, 0].astype(F32)       # (L, K)
+    v = v_ref[0, 0, 0].astype(F32)       # (L, V)
+    lw = w_ref[0, 0, 0].astype(F32)      # (L, K) log decay (<= 0)
+    u = u_ref[0].astype(F32)             # (K,)
+
+    cum = jnp.cumsum(lw, axis=0)         # (L, K)
+    cum_ex = cum - lw
+    # intra-chunk A[i,j] = sum_k r_ik k_jk exp(cum_ex_i - cum_j), j < i
+    diff = cum_ex[:, None, :] - cum[None, :, :]           # (L, L, K)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    dec = jnp.where(tri[..., None], jnp.exp(diff), 0.0)
+    A = jnp.einsum("lk,lsk->ls", r, dec * k[None, :, :])   # (L, L)
+    o = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32)
+    # current-token bonus
+    bonus = jnp.sum(r * (u[None, :] * k), axis=1)           # (L,)
+    o += bonus[:, None] * v
+    # carried state: o += (r * exp(cum_ex)) @ S     (S: (K, V))
+    r_dec = r * jnp.exp(cum_ex)
+    o += jax.lax.dot_general(r_dec, s_ref[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=F32)
+    o_ref[0, 0, 0] = o.astype(o_ref.dtype)
+    # state update: S' = diag(exp(cum_L)) S + sum_j (k_j exp(cum_L - cum_j))^T v_j
+    k_dec = k * jnp.exp(cum[-1][None, :] - cum)
+    s_ref[...] = s_ref[...] * jnp.exp(cum[-1])[:, None] + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+
+
+def rwkv6_scan(r, k, v, logw, u, *, chunk: int = 32, interpret: bool = False):
+    """r,k,logw: (B,S,H,K); v: (B,S,H,V); u: (H,K) -> o (B,S,H,V)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+
+    def arrange(t, d):
+        return jnp.moveaxis(t, 2, 1).reshape(B, H, nc, L, d)
+
+    logw = jnp.clip(logw.astype(F32), -6.0, 0.0)
+    out = pl.pallas_call(
+        functools.partial(_rwkv_kernel, L=L),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, K), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, K), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, V), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, K), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, L, V), lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, L, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), F32)],
+        interpret=interpret,
+    )(arrange(r, K), arrange(k, K), arrange(v, V), arrange(logw, K),
+      u.astype(F32))
+    return jnp.moveaxis(out.reshape(B, H, S, V), 1, 2)

@@ -1,0 +1,88 @@
+"""Pallas Mamba2/SSD chunked-scan kernel.
+
+Grid: (B, H, n_chunks) with the chunk dim innermost; the inter-chunk SSM
+state (P x N, fp32) lives in VMEM scratch and is carried across chunk steps
+(TPU grid iteration is sequential on the last axis). Each step computes the
+intra-chunk causal contribution with a segment-sum decay matrix plus the
+carried-state contribution — identical math to models.ssm.ssd_chunked but
+blocked for VMEM residency of (x, B, C, dt) chunk tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, s_ref, *, L: int):
+    cj = pl.program_id(2)
+
+    @pl.when(cj == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0, 0, 0].astype(F32)       # (L, P)
+    dt = dt_ref[0, 0, 0].astype(F32)     # (L,)
+    A = a_ref[0]                         # scalar decay rate (<0)
+    Bm = b_ref[0, 0].astype(F32)         # (L, N)
+    Cm = c_ref[0, 0].astype(F32)         # (L, N)
+
+    a = dt * A                           # (L,) log-decay per step
+    xd = x * dt[:, None]
+    cum = jnp.cumsum(a)                  # (L,)
+    # intra-chunk: Lmat[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    Lmat = jnp.where(tri, jnp.exp(diff), 0.0)
+    # scores G[i,j] = C_i . B_j ; Y_diag = (G * Lmat) @ xd
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)
+    y = jax.lax.dot_general(G * Lmat, xd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32)
+    # carried state: Y_off = (C * exp(cum)) @ S^T   (S: (P, N))
+    c_dec = Cm * jnp.exp(cum)[:, None]
+    y += jax.lax.dot_general(c_dec, s_ref[...], (((1,), (1,)), ((), ())),
+                             preferred_element_type=F32)
+    o_ref[0, 0, 0] = y.astype(o_ref.dtype)
+    # state update: S' = exp(cum_L) S + sum_j exp(cum_L - cum_j) xd_j (x) B_j
+    k_dec = Bm * jnp.exp(cum[-1] - cum)[:, None]
+    s_new = s_ref[...] * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xd, k_dec, (((0,), (0,)), ((), ())), preferred_element_type=F32)
+    s_ref[...] = s_new
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm,Cm: (B,S,N) -> y (B,S,H,P).
+
+    B/C shared across heads (ngroups=1), decay scalar per head (Mamba2)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0
+    nc = S // L
+    xt = jnp.moveaxis(x, 2, 1).reshape(Bsz, H, nc, L, P)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(Bsz, H, nc, L)
+    bt = Bm.reshape(Bsz, nc, L, N)
+    ct = Cm.reshape(Bsz, nc, L, N)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, L=L),
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, nc, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), F32)],
+        interpret=interpret,
+    )(xt, dtt, A.astype(F32), bt, ct)
+    return jnp.moveaxis(out.reshape(Bsz, H, S, P), 1, 2)

@@ -1,0 +1,174 @@
+"""Attention blocks: GQA/MQA (llama-family) and MLA (DeepSeek-V2,
+arXiv:2405.04434), with prefill (blocked attention) and decode (KV cache)
+paths. MLA caches only the compressed latent (kv_lora) + shared rope key and
+uses the absorbed-matmul decode path (the W_UK / W_UV absorption trick).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_mrope, apply_rope, blocked_attention,
+                                 decode_attention, decode_attention_kv_sharded,
+                                 rmsnorm)
+from repro.models.module import ParamSpec
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA
+# ---------------------------------------------------------------------------
+
+def gqa_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype=jnp.bfloat16):
+    return {
+        "wq": ParamSpec((d_model, n_heads * head_dim), dtype, ("embed", "heads")),
+        "wk": ParamSpec((d_model, n_kv * head_dim), dtype, ("embed", "kv_heads")),
+        "wv": ParamSpec((d_model, n_kv * head_dim), dtype, ("embed", "kv_heads")),
+        "wo": ParamSpec((n_heads * head_dim, d_model), dtype, ("heads", "embed")),
+    }
+
+
+def gqa_attention(params, x, positions, *, n_heads, n_kv, head_dim,
+                  rope="rope", rope_theta=1e4, mrope_sections=None,
+                  mrope_positions=None, causal=True, cache=None, cur_len=None,
+                  mesh=None, kv_seq_shard=False, block_q=512, block_kv=1024,
+                  cross_kv=None):
+    """x: (B,S,D). cache: dict(k,v: (B,T,Hkv,Dh)) for decode.
+
+    Returns (out, new_cache). cross_kv: (k, v) for encoder-decoder cross-attn
+    (no rope, no cache update, non-causal over encoder length)."""
+    B, S, D = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = blocked_attention(q, k, v, causal=False,
+                                block_q=block_q, block_kv=block_kv)
+        return out.reshape(B, S, -1) @ params["wo"], None
+
+    k = (x @ params["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ params["wv"]).reshape(B, S, n_kv, head_dim)
+    if rope == "rope":
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    elif rope == "mrope":
+        q = apply_mrope(q, mrope_positions, mrope_sections, rope_theta)
+        k = apply_mrope(k, mrope_positions, mrope_sections, rope_theta)
+
+    if cache is None:
+        out = blocked_attention(q, k, v, causal=causal,
+                                block_q=block_q, block_kv=block_kv)
+        new_cache = None
+    elif S == 1:  # decode step
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cur_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cur_len, 0, 0))
+        if kv_seq_shard and mesh is not None:
+            out = decode_attention_kv_sharded(q, kc, vc, cur_len + 1, mesh)
+        else:
+            out = decode_attention(q, kc, vc, cur_len + 1)
+        new_cache = {"k": kc, "v": vc}
+    else:  # prefill: compute attention and materialize the cache
+        out = blocked_attention(q, k, v, causal=causal,
+                                block_q=block_q, block_kv=block_kv)
+        T = cache["k"].shape[1]
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+
+    return out.reshape(B, S, -1) @ params["wo"], new_cache
+
+
+def gqa_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("batch", "kv_seq", "kv_heads", None)
+    return {"k": ParamSpec(shape, dtype, axes, init="zeros"),
+            "v": ParamSpec(shape, dtype, axes, init="zeros")}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_specs(d_model: int, n_heads: int, qk_nope: int, qk_rope: int,
+              v_dim: int, kv_lora: int, dtype=jnp.bfloat16):
+    return {
+        "wq": ParamSpec((d_model, n_heads * (qk_nope + qk_rope)), dtype,
+                        ("embed", "heads")),
+        "wkv_a": ParamSpec((d_model, kv_lora + qk_rope), dtype, ("embed", None)),
+        "kv_norm": ParamSpec((kv_lora,), dtype, (None,), init="ones"),
+        "wk_b": ParamSpec((kv_lora, n_heads * qk_nope), dtype, (None, "heads")),
+        "wv_b": ParamSpec((kv_lora, n_heads * v_dim), dtype, (None, "heads")),
+        "wo": ParamSpec((n_heads * v_dim, d_model), dtype, ("heads", "embed")),
+    }
+
+
+def mla_attention(params, x, positions, *, n_heads, qk_nope, qk_rope, v_dim,
+                  kv_lora, rope_theta=1e4, cache=None, cur_len=None,
+                  block_q=512, block_kv=1024):
+    """Returns (out, new_cache); cache = dict(ckv: (B,T,kv_lora),
+    kr: (B,T,qk_rope))."""
+    B, S, D = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, qk_nope + qk_rope)
+    qn, qr = q[..., :qk_nope], q[..., qk_nope:]
+    qr = apply_rope(qr, positions, rope_theta)
+
+    kv = x @ params["wkv_a"]
+    ckv = rmsnorm(kv[..., :kv_lora], params["kv_norm"])        # (B,S,ckv)
+    kr = apply_rope(kv[..., kv_lora:][:, :, None, :], positions,
+                    rope_theta)[:, :, 0, :]                     # (B,S,dr)
+
+    if cache is not None and S == 1:  # absorbed decode path
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cur_len, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, cur_len, 0))
+        wk_b = params["wk_b"].reshape(kv_lora, n_heads, qk_nope)
+        wv_b = params["wv_b"].reshape(kv_lora, n_heads, v_dim)
+        # absorb W_UK into the query: scores via the latent space
+        q_c = jnp.einsum("bhd,khd->bhk", qn[:, 0], wk_b,
+                         preferred_element_type=F32)            # (B,H,ckv)
+        s = (jnp.einsum("bhk,btk->bht", q_c, ckv_c.astype(F32))
+             + jnp.einsum("bhr,btr->bht", qr[:, 0].astype(F32),
+                          kr_c.astype(F32))) / math.sqrt(qk_nope + qk_rope)
+        T = ckv_c.shape[1]
+        s = jnp.where((jnp.arange(T) <= cur_len)[None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bht,btk->bhk", p, ckv_c.astype(F32))  # (B,H,ckv)
+        heads = jnp.einsum("bhk,khd->bhd", ctx, wv_b.astype(F32))
+        out = heads.reshape(B, 1, n_heads * v_dim).astype(x.dtype)
+        return out @ params["wo"], {"ckv": ckv_c, "kr": kr_c}
+
+    # train/prefill: decompress per-head keys/values, blocked attention
+    kn = (ckv @ params["wk_b"]).reshape(B, S, n_heads, qk_nope)
+    vv = (ckv @ params["wv_b"]).reshape(B, S, n_heads, v_dim)
+    kr_b = jnp.broadcast_to(kr[:, :, None, :], (B, S, n_heads, qk_rope))
+    qf = jnp.concatenate([qn, qr], axis=-1)
+    kf = jnp.concatenate([kn, kr_b], axis=-1)
+    out = blocked_attention(qf, kf, vv, causal=True,
+                            block_q=block_q, block_kv=block_kv)
+    new_cache = None
+    if cache is not None:  # prefill fills the latent cache
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["kr"], kr.astype(cache["kr"].dtype), (0, 0, 0))
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    return out.reshape(B, S, -1) @ params["wo"], new_cache
+
+
+def mla_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": ParamSpec((batch, max_len, m["kv_lora"]), dtype,
+                         ("batch", "kv_seq", None), init="zeros"),
+        "kr": ParamSpec((batch, max_len, m["qk_rope"]), dtype,
+                        ("batch", "kv_seq", None), init="zeros"),
+    }

@@ -1,0 +1,158 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The audio conv frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings (B, enc_len, D) directly into the encoder.
+Positional information is sinusoidal (parameter-free) so the same weights
+serve every assigned sequence length; whisper's learned positions are noted
+as a deviation in DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models.layers import gelu_mlp, gelu_mlp_specs, layernorm
+from repro.models.module import ParamSpec, stack_specs
+from repro.sharding.rules import constrain
+
+F32 = jnp.float32
+
+
+def sinusoidal(positions, d_model: int):
+    """positions: (B,S) -> (B,S,D)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=F32) / (half - 1))
+    args = positions[..., None].astype(F32) * freqs
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+def _ln_specs(cfg):
+    return {"scale": ParamSpec((cfg.d_model,), cfg.dtype, (None,), init="ones"),
+            "bias": ParamSpec((cfg.d_model,), cfg.dtype, (None,), init="zeros")}
+
+
+def enc_layer_specs(cfg: ArchConfig):
+    return {
+        "ln1": _ln_specs(cfg),
+        "attn": attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, cfg.dtype),
+        "ln2": _ln_specs(cfg),
+        "ffn": gelu_mlp_specs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def dec_layer_specs(cfg: ArchConfig):
+    return {
+        "ln1": _ln_specs(cfg),
+        "self": attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, cfg.dtype),
+        "lnx": _ln_specs(cfg),
+        "cross": attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, cfg.dtype),
+        "ln2": _ln_specs(cfg),
+        "ffn": gelu_mlp_specs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def whisper_param_specs(cfg: ArchConfig):
+    enc_layers = cfg.enc["enc_layers"]
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), cfg.dtype,
+                           ("vocab", None), scale=0.02),
+        "enc_layers": stack_specs(enc_layer_specs(cfg), enc_layers),
+        "enc_norm": _ln_specs(cfg),
+        "dec_layers": stack_specs(dec_layer_specs(cfg), cfg.n_layers),
+        "dec_norm": _ln_specs(cfg),
+    }
+
+
+def _ln(p, x):
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def encode(cfg: ArchConfig, params, enc_embeds, *, mesh, remat=False):
+    """enc_embeds: (B, enc_len, D) from the stub conv frontend."""
+    B, T, D = enc_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    x = enc_embeds + sinusoidal(pos, D).astype(enc_embeds.dtype)
+    x = constrain(x, mesh, "batch", None, None)
+
+    def body(x, lp):
+        h = _ln(lp["ln1"], x)
+        y, _ = attn.gqa_attention(lp["attn"], h, pos, n_heads=cfg.n_heads,
+                                  n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                                  rope="none", causal=False, mesh=mesh)
+        x = x + y
+        x = x + gelu_mlp(lp["ffn"], _ln(lp["ln2"], x))
+        return constrain(x, mesh, "batch", None, None), None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return _ln(params["enc_norm"], x)
+
+
+def decode_stack(cfg: ArchConfig, params, tokens, enc_out, *, mesh,
+                 caches=None, cur_len=None, remat=False):
+    """tokens: (B,S). caches: dict(self_k/self_v (L,B,T,H,Dh),
+    cross_k/cross_v (L,B,Tenc,H,Dh)) or None (training).
+
+    Returns (hidden, new_caches)."""
+    B, S = tokens.shape
+    base = 0 if cur_len is None else cur_len
+    pos = base + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + sinusoidal(pos, cfg.d_model).astype(x.dtype)
+    x = constrain(x, mesh, "batch", None, None)
+
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, inp):
+        lp, cache_l = inp
+        h = _ln(lp["ln1"], x)
+        self_cache = None
+        if cache_l is not None:
+            self_cache = {"k": cache_l["self_k"], "v": cache_l["self_v"]}
+        y, new_self = attn.gqa_attention(
+            lp["self"], h, pos, n_heads=cfg.n_heads, n_kv=Hkv, head_dim=Dh,
+            rope="none", causal=True, cache=self_cache, cur_len=cur_len,
+            mesh=mesh)
+        x = x + y
+        # cross attention to the encoder output
+        h = _ln(lp["lnx"], x)
+        if cache_l is not None:
+            ck, cv = cache_l["cross_k"], cache_l["cross_v"]
+        else:
+            Te = enc_out.shape[1]
+            ck = (enc_out @ lp["cross"]["wk"]).reshape(B, Te, Hkv, Dh)
+            cv = (enc_out @ lp["cross"]["wv"]).reshape(B, Te, Hkv, Dh)
+        y, _ = attn.gqa_attention(lp["cross"], h, pos, n_heads=cfg.n_heads,
+                                  n_kv=Hkv, head_dim=Dh, rope="none",
+                                  cross_kv=(ck, cv), mesh=mesh)
+        x = x + y
+        x = x + gelu_mlp(lp["ffn"], _ln(lp["ln2"], x))
+        x = constrain(x, mesh, "batch", None, None)
+        new_cache = None
+        if cache_l is not None:
+            new_cache = {"self_k": new_self["k"], "self_v": new_self["v"],
+                         "cross_k": ck, "cross_v": cv}
+        return x, new_cache
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else body
+    x, new_caches = jax.lax.scan(fn, x, (params["dec_layers"], caches))
+    return _ln(params["dec_norm"], x), new_caches
+
+
+def whisper_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    L = cfg.n_layers
+    Te = cfg.enc["enc_len"]
+    kv = lambda T: ParamSpec((L, batch, T, cfg.n_kv_heads, cfg.head_dim),
+                             cfg.dtype, (None, "batch", "kv_seq", "kv_heads", None),
+                             init="zeros")
+    return {"self_k": kv(max_len), "self_v": kv(max_len),
+            "cross_k": kv(Te), "cross_v": kv(Te)}

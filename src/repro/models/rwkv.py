@@ -1,0 +1,192 @@
+"""RWKV-6 "Finch" layer (arXiv:2404.05892): linear attention with
+data-dependent per-channel decay, chunked parallel form for train/prefill
+and recurrent form for decode.
+
+Per head (key dim K, value dim V):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t                S: (K, V)
+    o_t = r_t S_{t-1} + (r_t . (u * k_t)) v_t          u: per-channel bonus
+
+The chunked form evaluates the intra-chunk causal part with an explicit
+(L, L, K) decay tensor (numerically safe: all exponents are <= 0, no
+factored exp blow-up), and carries S across chunks with a scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec
+
+F32 = jnp.float32
+LOGW_MIN = -6.0  # per-step log-decay clamp (numerical guard, documented)
+
+
+def rwkv6_chunked(r, k, v, logw, u, chunk: int = 32, initial_state=None):
+    """r,k,logw: (B,S,H,K); v: (B,S,H,V); u: (H,K).
+
+    Returns (o: (B,S,H,V), final_state: (B,H,K,V))."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    nc = S // L
+    assert nc * L == S
+
+    logw = jnp.clip(logw.astype(F32), LOGW_MIN, 0.0)
+    rc = r.reshape(B, nc, L, H, K).astype(F32)
+    kc = k.reshape(B, nc, L, H, K).astype(F32)
+    vc = v.reshape(B, nc, L, H, V).astype(F32)
+    wc = logw.reshape(B, nc, L, H, K)
+
+    cum = jnp.cumsum(wc, axis=2)                       # inclusive (B,nc,L,H,K)
+    cum_ex = cum - wc                                  # exclusive:  sum_{j<i}
+
+    # ---- intra-chunk: A[l,s] = sum_k r_l k_s exp(cum_ex_l - cum_s), s < l ---
+    diff = cum_ex[:, :, :, None] - cum[:, :, None, :, :, :]   # (B,nc,L,L,H,K)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)[None, None, :, :, None, None]
+    dec = jnp.where(tri, diff, -jnp.inf)
+    A = jnp.einsum("bclhk,bclshk->bclsh",
+                   rc, jnp.exp(dec) * kc[:, :, None])          # (B,nc,L,L,H)
+    o_intra = jnp.einsum("bclsh,bcshv->bclhv", A, vc)
+    # current-token bonus
+    bonus = jnp.einsum("bclhk,bclhk->bclh", rc, u[None, None, None] * kc)
+    o_intra = o_intra + bonus[..., None] * vc
+
+    # ---- inter-chunk state carry --------------------------------------------
+    # state contribution of chunk c: sum_j diag(exp(cum_L - cum_j)) k_j^T v_j
+    k_dec = kc * jnp.exp(cum[:, :, -1:, :, :] - cum)           # (B,nc,L,H,K)
+    chunk_kv = jnp.einsum("bclhk,bclhv->bchkv", k_dec, vc)
+    chunk_decay = jnp.exp(cum[:, :, -1])                        # (B,nc,H,K)
+
+    s0 = (jnp.zeros((B, H, K, V), F32) if initial_state is None
+          else initial_state.astype(F32))
+
+    def step(s, inp):
+        dec_c, kv_c = inp
+        s_next = s * dec_c[..., None] + kv_c
+        return s_next, s                                        # state BEFORE chunk
+
+    s_final, prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(chunk_kv, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                             # (B,nc,H,K,V)
+
+    r_dec = rc * jnp.exp(cum_ex)                                # (B,nc,L,H,K)
+    o_inter = jnp.einsum("bclhk,bchkv->bclhv", r_dec, prev)
+
+    o = (o_intra + o_inter).reshape(B, S, H, V)
+    return o.astype(r.dtype), s_final
+
+
+def rwkv6_scan_oracle(r, k, v, logw, u, initial_state=None):
+    """Pure per-token recurrence (test oracle)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    logw = jnp.clip(logw.astype(F32), LOGW_MIN, 0.0)
+    s0 = (jnp.zeros((B, H, K, V), F32) if initial_state is None
+          else initial_state.astype(F32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s) + \
+            jnp.einsum("bhk,bhk->bh", rt, u[None] * kt)[..., None] * vt
+        s = s * jnp.exp(wt)[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        return s, o
+
+    xs = tuple(jnp.moveaxis(t.astype(F32), 1, 0) for t in (r, k, v, logw))
+    s, os = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(os, 0, 1).astype(r.dtype), s
+
+
+def rwkv6_decode_step(state, r, k, v, logw, u):
+    """One token: r,k,v,logw (B,1,H,*). Returns (o, new_state)."""
+    rt, kt, vt = r[:, 0].astype(F32), k[:, 0].astype(F32), v[:, 0].astype(F32)
+    wt = jnp.clip(logw[:, 0].astype(F32), LOGW_MIN, 0.0)
+    o = jnp.einsum("bhk,bhkv->bhv", rt, state) + \
+        jnp.einsum("bhk,bhk->bh", rt, u[None] * kt)[..., None] * vt
+    s = state * jnp.exp(wt)[..., None] + jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    return o[:, None].astype(r.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block: time-mix (wkv attention) + channel-mix, with token-shift
+# ---------------------------------------------------------------------------
+
+def rwkv6_specs(d_model: int, head_dim: int = 64, d_ff: int | None = None,
+                dtype=jnp.bfloat16):
+    H = d_model // head_dim
+    d_ff = d_ff or int(3.5 * d_model)
+    lora = max(32, d_model // 16)
+    return {
+        "tm": {  # time mix
+            "mu_r": ParamSpec((d_model,), dtype, (None,), init="zeros"),
+            "mu_k": ParamSpec((d_model,), dtype, (None,), init="zeros"),
+            "mu_v": ParamSpec((d_model,), dtype, (None,), init="zeros"),
+            "mu_w": ParamSpec((d_model,), dtype, (None,), init="zeros"),
+            "mu_g": ParamSpec((d_model,), dtype, (None,), init="zeros"),
+            "Wr": ParamSpec((d_model, d_model), dtype, ("embed", "heads")),
+            "Wk": ParamSpec((d_model, d_model), dtype, ("embed", "heads")),
+            "Wv": ParamSpec((d_model, d_model), dtype, ("embed", "heads")),
+            "Wg": ParamSpec((d_model, d_model), dtype, ("embed", "heads")),
+            "Wo": ParamSpec((d_model, d_model), dtype, ("heads", "embed")),
+            # data-dependent decay: w = exp(-softplus(lora path)) per channel
+            "w_lora_a": ParamSpec((d_model, lora), dtype, ("embed", None)),
+            "w_lora_b": ParamSpec((lora, d_model), dtype, (None, "heads")),
+            "w_bias": ParamSpec((d_model,), jnp.float32, (None,), init="zeros"),
+            "u": ParamSpec((H, head_dim), jnp.float32, (None, None),
+                           init="zeros"),
+            "ln_out": ParamSpec((d_model,), dtype, (None,), init="ones"),
+        },
+        "cm": {  # channel mix
+            "mu_k": ParamSpec((d_model,), dtype, (None,), init="zeros"),
+            "Wk": ParamSpec((d_model, d_ff), dtype, ("embed", "mlp")),
+            "Wv": ParamSpec((d_ff, d_model), dtype, ("mlp", "embed")),
+            "Wr": ParamSpec((d_model, d_model), dtype, ("embed", None)),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """shift(x)[t] = x[t-1]; position 0 takes `last` (decode carry)."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def rwkv6_time_mix(p, x, *, head_dim: int = 64, chunk: int = 32,
+                   state=None, last_x=None):
+    B, S, D = x.shape
+    H = D // head_dim
+    last = last_x if last_x is not None else jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, last)
+
+    def mix(mu):
+        return x + (xs - x) * mu
+
+    r = (mix(p["mu_r"]) @ p["Wr"]).reshape(B, S, H, head_dim)
+    k = (mix(p["mu_k"]) @ p["Wk"]).reshape(B, S, H, head_dim)
+    v = (mix(p["mu_v"]) @ p["Wv"]).reshape(B, S, H, head_dim)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["Wg"])
+    w_raw = (mix(p["mu_w"]).astype(F32) @ p["w_lora_a"].astype(F32)
+             @ p["w_lora_b"].astype(F32)) + p["w_bias"]
+    logw = -jax.nn.softplus(-w_raw) - 0.5                 # in (-inf, -0.5)
+    logw = logw.reshape(B, S, H, head_dim)
+
+    if S > 1:  # train / prefill (chunked parallel form)
+        o, s_final = rwkv6_chunked(r, k, v, logw, p["u"], chunk=chunk,
+                                   initial_state=state)
+    else:      # decode (recurrent form)
+        s0 = state if state is not None else jnp.zeros(
+            (B, H, head_dim, head_dim), F32)
+        o, s_final = rwkv6_decode_step(s0, r, k, v, logw, p["u"])
+
+    from repro.models.layers import rmsnorm
+    o = rmsnorm(o.reshape(B, S, D), p["ln_out"]) * g
+    return o @ p["Wo"], (s_final, x[:, -1, :])
+
+
+def rwkv6_channel_mix(p, x, last_x=None):
+    B, S, D = x.shape
+    last = last_x if last_x is not None else jnp.zeros((B, D), x.dtype)
+    xs = _token_shift(x, last)
+    xk = x + (xs - x) * p["mu_k"]
+    k = jnp.square(jax.nn.relu(xk @ p["Wk"]))
+    r = jax.nn.sigmoid(x @ p["Wr"])
+    return r * (k @ p["Wv"]), x[:, -1, :]

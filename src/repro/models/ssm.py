@@ -1,0 +1,182 @@
+"""Mamba2 / SSD (state-space duality) layer — chunked parallel form for
+train/prefill, recurrent form for decode (Dao & Gu, arXiv:2405.21060).
+
+Recurrence (per head h, head dim P, state dim N, B/C shared across heads):
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * (B_t  (x) x_t)      S: (N, P)
+    y_t = C_t @ S_t + D * x_t
+
+The chunked form computes intra-chunk contributions with a causal decay
+matrix (segment-sum) and carries inter-chunk states with a scan over chunks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import ParamSpec
+
+F32 = jnp.float32
+
+
+def segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k] (j < i)."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int = 64, initial_state=None):
+    """x: (B,S,H,P); dt: (B,S,H) >0; A: (H,) <0; Bm, Cm: (B,S,N).
+
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    nc = S // L
+    assert nc * L == S, (S, L)
+
+    a = (dt * A[None, None, :]).astype(F32)                 # (B,S,H) negative
+    xd = (x * dt[..., None]).astype(F32)
+    a_c = a.reshape(Bsz, nc, L, H)
+    x_c = xd.reshape(Bsz, nc, L, H, Pd)
+    B_c = Bm.reshape(Bsz, nc, L, N).astype(F32)
+    C_c = Cm.reshape(Bsz, nc, L, N).astype(F32)
+
+    # ---- intra-chunk (diagonal blocks) --------------------------------------
+    Lmat = jnp.exp(segsum(jnp.moveaxis(a_c, 3, 2)))         # (B,nc,H,L,L)
+    Y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        C_c, B_c, Lmat, x_c)
+
+    # ---- chunk-boundary states ----------------------------------------------
+    cum = jnp.cumsum(a_c, axis=2)                           # (B,nc,L,H)
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", B_c, decay_states, x_c)
+
+    # ---- inter-chunk recurrence over chunk states ----------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, Pd, N), F32) if initial_state is None
+          else initial_state.astype(F32))
+
+    def step(s, inp):
+        dec, st = inp                                        # (B,H), (B,H,P,N)
+        s_next = s * dec[:, :, None, None] + st
+        return s_next, s                                     # emit state BEFORE chunk
+
+    s_final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,H,P,N)
+
+    state_decay = jnp.exp(cum)                               # (B,nc,L,H)
+    Y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", C_c, prev_states, state_decay)
+
+    y = (Y_diag + Y_off).reshape(Bsz, S, H, Pd)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_scan_oracle(x, dt, A, Bm, Cm, initial_state=None):
+    """Pure per-token recurrence (test oracle)."""
+    Bsz, S, H, Pd = x.shape
+    N = Bm.shape[-1]
+    s0 = (jnp.zeros((Bsz, H, Pd, N), F32) if initial_state is None
+          else initial_state.astype(F32))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp
+        dec = jnp.exp(dtt * A)                               # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        s = s * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    xs = (jnp.moveaxis(x.astype(F32), 1, 0), jnp.moveaxis(dt.astype(F32), 1, 0),
+          jnp.moveaxis(Bm.astype(F32), 1, 0), jnp.moveaxis(Cm.astype(F32), 1, 0))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One-token recurrent update. x: (B,1,H,P); returns (y, new_state)."""
+    xt, dtt = x[:, 0].astype(F32), dt[:, 0].astype(F32)
+    bt, ct = Bm[:, 0].astype(F32), Cm[:, 0].astype(F32)
+    dec = jnp.exp(dtt * A)
+    upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+    s = state * dec[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", s, ct)
+    return y[:, None].astype(x.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj -> causal conv1d -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+CONV_W = 4  # causal short conv width
+
+
+def mamba2_specs(d_model: int, d_state: int = 64, headdim: int = 64,
+                 expand: int = 2, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    H = d_inner // headdim
+    d_conv = d_inner + 2 * d_state   # conv over [x, B, C]
+    return {
+        "in_proj": ParamSpec((d_model, 2 * d_inner + 2 * d_state + H), dtype,
+                             ("embed", "mlp")),
+        "conv_w": ParamSpec((CONV_W, d_conv), dtype, (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((d_conv,), dtype, (None,), init="zeros"),
+        "A_log": ParamSpec((H,), jnp.float32, (None,), init="zeros"),
+        "D": ParamSpec((H,), jnp.float32, (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), jnp.float32, (None,), init="zeros"),
+        "norm": ParamSpec((d_inner,), dtype, (None,), init="ones"),
+        "out_proj": ParamSpec((d_inner, d_model), dtype, ("mlp", "embed")),
+    }
+
+
+def _split_inproj(z_all, d_inner, d_state, H):
+    z, xbc, dt = jnp.split(z_all, [d_inner, 2 * d_inner + 2 * d_state], axis=-1)
+    return z, xbc, dt
+
+
+def mamba2_block(params, x, *, d_state: int = 64, headdim: int = 64,
+                 chunk: int = 64, state=None, conv_state=None):
+    """x: (B,S,D). state/conv_state given => single-step decode path.
+
+    Returns (y, (ssm_state, conv_state))."""
+    B, S, D = x.shape
+    d_inner = params["out_proj"].shape[0]
+    H = d_inner // headdim
+
+    z_all = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_inproj(z_all, d_inner, d_state, H)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"])   # (B,S,H)
+
+    # causal conv over [x, B, C] streams
+    if conv_state is None:
+        pad = jnp.zeros((B, CONV_W - 1, xbc.shape[-1]), xbc.dtype)
+        xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    else:
+        xbc_pad = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    new_conv_state = xbc_pad[:, -(CONV_W - 1):, :]
+    conv = sum(xbc_pad[:, i:i + S, :] * params["conv_w"][i][None, None, :]
+               for i in range(CONV_W)) + params["conv_b"]
+    conv = jax.nn.silu(conv)
+
+    xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + d_state], axis=-1)
+    xh = xs.reshape(B, S, H, headdim)
+    A = -jnp.exp(params["A_log"])                                   # (H,) < 0
+
+    if S > 1:  # train / prefill (chunked parallel form)
+        y, s_final = ssd_chunked(xh, dt, A, Bm, Cm, chunk=chunk,
+                                 initial_state=state)
+    else:      # decode (recurrent form)
+        s0 = state if state is not None else jnp.zeros(
+            (B, H, headdim, d_state), F32)
+        y, s_final = ssd_decode_step(s0, xh, dt, A, Bm, Cm)
+    y = y + params["D"][None, None, :, None].astype(F32) * xh.astype(F32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z.astype(F32)).astype(y.dtype), params["norm"])
+    return y @ params["out_proj"], (s_final, new_conv_state)

@@ -1,0 +1,356 @@
+"""Decoder-only LM assembly: config-driven mixer (GQA / MLA / RWKV6 / Mamba2)
++ FFN (GLU / GELU / fine-grained MoE / RWKV channel-mix), pre-norm residual
+blocks, layer stacks via lax.scan (bounded HLO at 95-layer scale), chunked
+vocab-sharded cross-entropy, and prefill / decode paths with per-layer caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (gelu_mlp, gelu_mlp_specs, glu_mlp,
+                                 glu_mlp_specs, layernorm, moe_ffn, moe_specs,
+                                 rmsnorm)
+from repro.models.module import ParamSpec, stack_specs
+from repro.sharding.rules import constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def _norm_specs(cfg, name_suffix=""):
+    if cfg.norm == "ln":
+        return {"scale": ParamSpec((cfg.d_model,), cfg.dtype, (None,), init="ones"),
+                "bias": ParamSpec((cfg.d_model,), cfg.dtype, (None,), init="zeros")}
+    return {"scale": ParamSpec((cfg.d_model,), cfg.dtype, (None,), init="ones")}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "ln":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+def mixer_specs(cfg: ArchConfig):
+    if cfg.mixer == "gqa":
+        return attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, cfg.dtype)
+    if cfg.mixer == "mla":
+        m = cfg.mla
+        return attn.mla_specs(cfg.d_model, cfg.n_heads, m["qk_nope"],
+                              m["qk_rope"], m["v_dim"], m["kv_lora"], cfg.dtype)
+    if cfg.mixer == "rwkv6":
+        return rwkv_mod.rwkv6_specs(cfg.d_model, cfg.head_dim, cfg.d_ff,
+                                    cfg.dtype)
+    if cfg.mixer == "mamba2":
+        s = cfg.ssm
+        return ssm_mod.mamba2_specs(cfg.d_model, s["d_state"], s["headdim"],
+                                    s.get("expand", 2), cfg.dtype)
+    raise ValueError(cfg.mixer)
+
+
+def ffn_specs(cfg: ArchConfig, moe_layer: bool):
+    if cfg.ffn == "none" or cfg.mixer == "rwkv6":  # rwkv owns its channel mix
+        return {}
+    if cfg.ffn == "moe" and moe_layer:
+        m = cfg.moe
+        return moe_specs(cfg.d_model, m["d_ff_expert"], m["n_routed"],
+                         m["n_shared"], cfg.dtype)
+    if cfg.ffn == "gelu":
+        return gelu_mlp_specs(cfg.d_model, cfg.d_ff, cfg.dtype)
+    d_ff = cfg.d_ff if cfg.ffn != "moe" else cfg.moe.get("d_ff_dense", cfg.d_ff)
+    return glu_mlp_specs(cfg.d_model, d_ff, cfg.dtype)
+
+
+def layer_specs(cfg: ArchConfig, moe_layer: bool = False):
+    specs = {"ln1": _norm_specs(cfg), "mixer": mixer_specs(cfg)}
+    fs = ffn_specs(cfg, moe_layer)
+    if fs:
+        specs["ln2"] = _norm_specs(cfg)
+        specs["ffn"] = fs
+    return specs
+
+
+def shared_attn_specs(cfg: ArchConfig):
+    """Zamba2-style shared transformer block (attention + GLU)."""
+    return {
+        "ln1": _norm_specs(cfg),
+        "attn": attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, cfg.dtype),
+        "ln2": _norm_specs(cfg),
+        "ffn": glu_mlp_specs(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# single layer application
+# ---------------------------------------------------------------------------
+
+def apply_mixer(cfg: ArchConfig, p, x, positions, *, mesh, cache=None,
+                cur_len=None, mrope_positions=None, kv_seq_shard=False):
+    """Returns (y, new_cache)."""
+    if cfg.mixer == "gqa":
+        return attn.gqa_attention(
+            p, x, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope=cfg.rope, rope_theta=cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections, mrope_positions=mrope_positions,
+            cache=cache, cur_len=cur_len, mesh=mesh, kv_seq_shard=kv_seq_shard)
+    if cfg.mixer == "mla":
+        m = cfg.mla
+        return attn.mla_attention(
+            p, x, positions, n_heads=cfg.n_heads, qk_nope=m["qk_nope"],
+            qk_rope=m["qk_rope"], v_dim=m["v_dim"], kv_lora=m["kv_lora"],
+            rope_theta=cfg.rope_theta, cache=cache, cur_len=cur_len)
+    if cfg.mixer == "rwkv6":
+        state, last_tm = (cache["state"], cache["last_tm"]) if cache else (None, None)
+        y, (s_new, last_new) = rwkv_mod.rwkv6_time_mix(
+            p["tm"], x, head_dim=cfg.head_dim, state=state, last_x=last_tm)
+        return y, ({"state": s_new, "last_tm": last_new} if cache is not None
+                   else None)
+    if cfg.mixer == "mamba2":
+        s = cfg.ssm
+        state, conv = (cache["state"], cache["conv"]) if cache else (None, None)
+        y, (s_new, conv_new) = ssm_mod.mamba2_block(
+            p, x, d_state=s["d_state"], headdim=s["headdim"],
+            state=state, conv_state=conv)
+        return y, ({"state": s_new, "conv": conv_new} if cache is not None
+                   else None)
+    raise ValueError(cfg.mixer)
+
+
+def apply_layer(cfg: ArchConfig, p, x, positions, *, mesh, moe_layer=False,
+                cache=None, cur_len=None, mrope_positions=None,
+                kv_seq_shard=False):
+    """Pre-norm residual block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), F32)
+    h = _apply_norm(cfg, p["ln1"], x)
+    y, new_cache = apply_mixer(cfg, p["mixer"], h, positions, mesh=mesh,
+                               cache=cache, cur_len=cur_len,
+                               mrope_positions=mrope_positions,
+                               kv_seq_shard=kv_seq_shard)
+    y = checkpoint_name(y, "mixer_out")
+    x = x + y
+    if cfg.mixer == "rwkv6":
+        # rwkv channel-mix with its own token shift
+        last_cm = cache["last_cm"] if cache is not None else None
+        h = _apply_norm(cfg, p["ln2"], x)
+        y, last_cm_new = rwkv_mod.rwkv6_channel_mix(p["ffn"], h, last_cm)
+        x = x + y
+        if new_cache is not None:
+            new_cache["last_cm"] = last_cm_new
+        return x, new_cache, aux
+    if "ffn" in p:
+        h = _apply_norm(cfg, p["ln2"], x)
+        if cfg.ffn == "moe" and moe_layer:
+            y, aux = moe_ffn(
+                p["ffn"], h, top_k=cfg.moe["top_k"], mesh=mesh,
+                impl=cfg.moe.get("impl", "capacity"),
+                capacity_factor=cfg.moe.get("capacity_factor", 1.25))
+        elif cfg.ffn == "gelu":
+            y = gelu_mlp(p["ffn"], h)
+        else:
+            y = glu_mlp(p["ffn"], h)
+        y = checkpoint_name(y, "ffn_out")
+        x = x + y
+    x = constrain(x, mesh, "batch", None, None)
+    return x, new_cache, aux
+
+
+def apply_shared_attn(cfg: ArchConfig, p, x, positions, *, mesh, cache=None,
+                      cur_len=None):
+    """Zamba2 shared attention block (full attention, shared params)."""
+    h = _apply_norm(cfg, p["ln1"], x)
+    y, new_cache = attn.gqa_attention(
+        p["attn"], h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, rope=cfg.rope, rope_theta=cfg.rope_theta,
+        cache=cache, cur_len=cur_len, mesh=mesh)
+    x = x + y
+    h = _apply_norm(cfg, p["ln2"], x)
+    return x + glu_mlp(p["ffn"], h), new_cache
+
+
+# ---------------------------------------------------------------------------
+# rwkv channel-mix spec injection (rwkv layers carry their own ffn group)
+# ---------------------------------------------------------------------------
+
+def rwkv_layer_specs(cfg: ArchConfig):
+    base = rwkv_mod.rwkv6_specs(cfg.d_model, cfg.head_dim, cfg.d_ff, cfg.dtype)
+    return {"ln1": _norm_specs(cfg), "mixer": {"tm": base["tm"]},
+            "ln2": _norm_specs(cfg), "ffn": base["cm"]}
+
+
+# ---------------------------------------------------------------------------
+# chunked vocab-parallel cross entropy
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(x, embed, labels, *, block: int = 512):
+    """x: (B,S,D) final hidden; embed: (V,D) tied head; labels: (B,S).
+
+    Computes softmax CE over the (possibly vocab-sharded) head in sequence
+    blocks, never materializing the full (B,S,V) logits."""
+    B, S, D = x.shape
+    nb = max(S // block, 1)
+    bs = S // nb
+    xb = x.reshape(B, nb, bs, D)
+    lb = labels.reshape(B, nb, bs)
+
+    def blk(carry, inp):
+        xi, li = inp
+        logits = jnp.einsum("bsd,vd->bsv", xi, embed,
+                            preferred_element_type=F32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(
+        blk, jnp.zeros((), F32),
+        (jnp.moveaxis(xb, 1, 0), jnp.moveaxis(lb, 1, 0)))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# full decoder forward
+# ---------------------------------------------------------------------------
+
+REMAT_POLICIES = {
+    # full: recompute everything in bwd (min memory, +1 fwd of compute)
+    "full": jax.checkpoint_policies.nothing_saveable,
+    # dots: save matmul outputs -> bwd skips recomputing GEMMs and their
+    # TP all-reduces (more memory, ~-25% compute)
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    # names: save only the d-model-sized post-all-reduce block outputs
+    # (tagged below) — bwd recomputes the wide FFN GEMMs locally but never
+    # re-issues their collectives; activation memory stays ~d-sized.
+    "names": jax.checkpoint_policies.save_only_these_names(
+        "mixer_out", "ffn_out"),
+}
+
+
+def _scan_layers(cfg, stacked_params, x, positions, *, mesh, moe_layer,
+                 caches=None, cur_len=None, mrope_positions=None,
+                 kv_seq_shard=False, remat=False):
+    """Scan a stacked layer group. caches: pytree stacked on axis 0 or None.
+
+    remat: False | True/'full' | 'dots' (see REMAT_POLICIES)."""
+
+    def body(carry, inp):
+        x, aux = carry
+        lp, cache_l = inp
+        x, new_cache, aux_l = apply_layer(
+            cfg, lp, x, positions, mesh=mesh, moe_layer=moe_layer,
+            cache=cache_l, cur_len=cur_len, mrope_positions=mrope_positions,
+            kv_seq_shard=kv_seq_shard)
+        return (x, aux + aux_l), new_cache
+
+    if remat:
+        policy = REMAT_POLICIES["full" if remat is True else remat]
+        fn = jax.checkpoint(body, policy=policy)
+    else:
+        fn = body
+    (x, aux), new_caches = jax.lax.scan(
+        fn, (x, jnp.zeros((), F32)), (stacked_params, caches))
+    return x, aux, new_caches
+
+
+def decoder_forward(cfg: ArchConfig, params, tokens, *, mesh, positions=None,
+                    mrope_positions=None, caches=None, cur_len=None,
+                    kv_seq_shard=False, remat=False, inputs_embeds=None):
+    """tokens: (B,S) int32 (or inputs_embeds (B,S,D) for stub frontends).
+
+    Returns (hidden: (B,S,D), new_caches, aux_loss)."""
+    B, S = tokens.shape[:2] if inputs_embeds is None else inputs_embeds.shape[:2]
+    if positions is None:
+        base = 0 if cur_len is None else cur_len
+        positions = base + jnp.arange(S)[None, :]
+        positions = jnp.broadcast_to(positions, (B, S))
+    if mrope_positions is None and cfg.rope == "mrope":
+        mrope_positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    if inputs_embeds is not None:
+        x = inputs_embeds
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.name.startswith("whisper"):
+            pass
+    x = constrain(x, mesh, "batch", None, None)
+    aux = jnp.zeros((), F32)
+
+    if cfg.hybrid:  # zamba2: groups of mamba layers + shared attention block
+        every = cfg.hybrid["attn_every"]
+        n_groups = cfg.n_layers // every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+            params["layers"])
+        shared = params["shared_attn"]
+        g_caches = caches["layers"] if caches is not None else None
+        a_caches = caches["shared"] if caches is not None else None
+
+        def group_body(carry, inp):
+            x, aux = carry
+            gp, gcache, acache = inp
+            x, aux_g, new_gcache = _scan_layers(
+                cfg, gp, x, positions, mesh=mesh, moe_layer=False,
+                caches=gcache, cur_len=cur_len, remat=remat)
+            x, new_acache = apply_shared_attn(cfg, shared, x, positions,
+                                              mesh=mesh, cache=acache,
+                                              cur_len=cur_len)
+            return (x, aux + aux_g), (new_gcache, new_acache)
+
+        if g_caches is not None:
+            g_caches_r = jax.tree.map(
+                lambda a: a.reshape((n_groups, every) + a.shape[1:]), g_caches)
+        else:
+            g_caches_r = None
+        (x, aux), (new_g, new_a) = jax.lax.scan(
+            group_body, (x, aux), (grouped, g_caches_r, a_caches))
+        new_caches = None
+        if caches is not None:
+            new_caches = {
+                "layers": jax.tree.map(
+                    lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_g),
+                "shared": new_a,
+            }
+    else:
+        new_caches = {} if caches is not None else None
+        offset = 0
+        n_dense = (cfg.moe or {}).get("first_dense_layers", 0)
+        if cfg.ffn == "moe" and n_dense:
+            x, aux0, nc = _scan_layers(
+                cfg, params["dense_layers"], x, positions, mesh=mesh,
+                moe_layer=False,
+                caches=None if caches is None else caches["dense_layers"],
+                cur_len=cur_len, mrope_positions=mrope_positions,
+                kv_seq_shard=kv_seq_shard, remat=remat)
+            aux += aux0
+            if caches is not None:
+                new_caches["dense_layers"] = nc
+        x, aux1, nc = _scan_layers(
+            cfg, params["layers"], x, positions, mesh=mesh,
+            moe_layer=(cfg.ffn == "moe"),
+            caches=None if caches is None else caches["layers"],
+            cur_len=cur_len, mrope_positions=mrope_positions,
+            kv_seq_shard=kv_seq_shard, remat=remat)
+        aux += aux1
+        if caches is not None:
+            new_caches["layers"] = nc
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    return x, new_caches, aux
+
+
+def lm_head(cfg: ArchConfig, params, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", x, head, preferred_element_type=F32)

@@ -1,0 +1,246 @@
+"""Model zoo: ArchConfig -> param/cache specs + train / prefill / decode
+entry points + analytic MODEL_FLOPS (for the roofline's useful-compute ratio).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import attention as attn
+from repro.models import encdec
+from repro.models import transformer as tfm
+from repro.models.module import ParamSpec, count_params, stack_specs
+from repro.sharding.rules import constrain
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# parameter / cache specs
+# ---------------------------------------------------------------------------
+
+def build_param_specs(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return encdec.whisper_param_specs(cfg)
+    specs: dict[str, Any] = {
+        # vocab-sharded only: a 2D-sharded table forces SPMD to fully
+        # rematerialize the gather (embedding lookups index the vocab dim)
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), cfg.dtype,
+                           ("vocab", None), scale=0.02),
+        "final_norm": tfm._norm_specs(cfg),
+    }
+    if cfg.mixer == "rwkv6":
+        specs["layers"] = stack_specs(tfm.rwkv_layer_specs(cfg), cfg.n_layers)
+    elif cfg.hybrid:
+        specs["layers"] = stack_specs(tfm.layer_specs(cfg), cfg.n_layers)
+        specs["shared_attn"] = tfm.shared_attn_specs(cfg)
+    elif cfg.ffn == "moe":
+        n_dense = cfg.moe.get("first_dense_layers", 0)
+        if n_dense:
+            specs["dense_layers"] = stack_specs(
+                tfm.layer_specs(cfg, moe_layer=False), n_dense)
+        specs["layers"] = stack_specs(
+            tfm.layer_specs(cfg, moe_layer=True), cfg.n_layers - n_dense)
+    else:
+        specs["layers"] = stack_specs(tfm.layer_specs(cfg), cfg.n_layers)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.vocab, cfg.d_model), cfg.dtype,
+                                     ("vocab", None), scale=0.02)
+    return specs
+
+
+def _mixer_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.mixer == "gqa":
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        axes = ("batch", "kv_seq", "kv_heads", None)
+        return {"k": ParamSpec(shape, cfg.dtype, axes, init="zeros"),
+                "v": ParamSpec(shape, cfg.dtype, axes, init="zeros")}
+    if cfg.mixer == "mla":
+        m = cfg.mla
+        return {"ckv": ParamSpec((batch, max_len, m["kv_lora"]), cfg.dtype,
+                                 ("batch", "kv_seq", None), init="zeros"),
+                "kr": ParamSpec((batch, max_len, m["qk_rope"]), cfg.dtype,
+                                ("batch", "kv_seq", None), init="zeros")}
+    if cfg.mixer == "rwkv6":
+        H = cfg.d_model // cfg.head_dim
+        return {
+            "state": ParamSpec((batch, H, cfg.head_dim, cfg.head_dim), F32,
+                               ("batch", "heads", None, None), init="zeros"),
+            "last_tm": ParamSpec((batch, cfg.d_model), cfg.dtype,
+                                 ("batch", None), init="zeros"),
+            "last_cm": ParamSpec((batch, cfg.d_model), cfg.dtype,
+                                 ("batch", None), init="zeros"),
+        }
+    if cfg.mixer == "mamba2":
+        s = cfg.ssm
+        d_inner = s.get("expand", 2) * cfg.d_model
+        H = d_inner // s["headdim"]
+        d_conv = d_inner + 2 * s["d_state"]
+        from repro.models.ssm import CONV_W
+        return {
+            "state": ParamSpec((batch, H, s["headdim"], s["d_state"]), F32,
+                               ("batch", "heads", None, None), init="zeros"),
+            "conv": ParamSpec((batch, CONV_W - 1, d_conv), cfg.dtype,
+                              ("batch", None, None), init="zeros"),
+        }
+    raise ValueError(cfg.mixer)
+
+
+def build_cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return encdec.whisper_cache_specs(cfg, batch, max_len)
+    per_layer = _mixer_cache_specs(cfg, batch, max_len)
+    if cfg.hybrid:
+        every = cfg.hybrid["attn_every"]
+        n_groups = cfg.n_layers // every
+        shared = {
+            "k": ParamSpec((n_groups, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.dtype,
+                           (None, "batch", "kv_seq", "kv_heads", None),
+                           init="zeros"),
+            "v": ParamSpec((n_groups, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), cfg.dtype,
+                           (None, "batch", "kv_seq", "kv_heads", None),
+                           init="zeros"),
+        }
+        return {"layers": stack_specs(per_layer, cfg.n_layers),
+                "shared": shared}
+    out = {"layers": stack_specs(per_layer, cfg.n_layers)}
+    n_dense = (cfg.moe or {}).get("first_dense_layers", 0) if cfg.ffn == "moe" else 0
+    if n_dense:
+        out["layers"] = stack_specs(per_layer, cfg.n_layers - n_dense)
+        out["dense_layers"] = stack_specs(per_layer, n_dense)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def train_loss(cfg: ArchConfig, params, batch, *, mesh, remat=True):
+    """batch: tokens (B,S), labels (B,S) [+ enc_embeds / mrope_positions].
+
+    Returns scalar loss (CE + MoE aux)."""
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(cfg, params, batch["enc_embeds"], mesh=mesh,
+                                remat=remat)
+        x, _ = encdec.decode_stack(cfg, params, batch["tokens"], enc_out,
+                                   mesh=mesh, remat=remat)
+        loss = tfm.chunked_ce_loss(x, params["embed"], batch["labels"])
+        return loss
+    x, _, aux = tfm.decoder_forward(
+        cfg, params, batch["tokens"], mesh=mesh,
+        mrope_positions=batch.get("mrope_positions"), remat=remat)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    loss = tfm.chunked_ce_loss(x, head, batch["labels"])
+    if cfg.ffn == "moe":
+        loss = loss + 0.01 * aux
+    return loss
+
+
+def prefill(cfg: ArchConfig, params, batch, caches, *, mesh):
+    """Run the prompt, fill caches, return last-token logits + caches."""
+    if cfg.family == "encdec":
+        enc_out = encdec.encode(cfg, params, batch["enc_embeds"], mesh=mesh)
+        x, caches = encdec.decode_stack(cfg, params, batch["tokens"], enc_out,
+                                        mesh=mesh, caches=caches, cur_len=0)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"],
+                            preferred_element_type=F32)
+        return logits, caches
+    x, caches, _ = tfm.decoder_forward(
+        cfg, params, batch["tokens"], mesh=mesh, caches=caches, cur_len=0,
+        mrope_positions=batch.get("mrope_positions"))
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], head,
+                        preferred_element_type=F32)
+    return logits, caches
+
+
+def decode_step(cfg: ArchConfig, params, tokens, caches, cur_len, *, mesh,
+                kv_seq_shard=False, enc_out=None):
+    """One decode step. tokens: (B,1); cur_len: scalar int32.
+
+    Returns (logits (B,V), new caches)."""
+    if cfg.family == "encdec":
+        x, caches = encdec.decode_stack(cfg, params, tokens, enc_out,
+                                        mesh=mesh, caches=caches,
+                                        cur_len=cur_len)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"],
+                            preferred_element_type=F32)
+        return logits, caches
+    x, caches, _ = tfm.decoder_forward(
+        cfg, params, tokens, mesh=mesh, caches=caches, cur_len=cur_len,
+        kv_seq_shard=kv_seq_shard)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], head,
+                        preferred_element_type=F32)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation) + analytic FLOPs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Data-argument ShapeDtypeStructs for the given (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc["enc_len"], cfg.d_model), cfg.dtype)
+        if cfg.rope == "mrope":
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc["enc_len"], cfg.d_model), cfg.dtype)
+        if cfg.rope == "mrope":
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return batch
+    # decode: one new token against a cache of length S
+    batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+             "cur_len": jax.ShapeDtypeStruct((), i32)}
+    if cfg.family == "encdec":
+        batch["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc["enc_len"], cfg.d_model), cfg.dtype)
+    return batch
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE counts shared + top_k routed)."""
+    total = count_params(build_param_specs(cfg))
+    if cfg.ffn != "moe":
+        return total
+    m = cfg.moe
+    n_moe_layers = cfg.n_layers - m.get("first_dense_layers", 0)
+    per_expert = 3 * cfg.d_model * m["d_ff_expert"]
+    inactive = n_moe_layers * (m["n_routed"] - m["top_k"]) * per_expert
+    return total - inactive
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D (train) / 2*N_active*D (+attention
+    KV term) for inference shapes."""
+    n_act = active_params(cfg)
+    n_emb = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_body = n_act - n_emb + cfg.vocab * cfg.d_model  # head matmul is compute
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.mixer in ("gqa", "mla"):
+        attn_tr = 2 * B * S * S * cfg.n_heads * cfg.head_dim  # causal avg
+        attn_dec = 4 * B * S * cfg.n_heads * cfg.head_dim
+    else:
+        attn_tr = attn_dec = 0.0
+    if shape.kind == "train":
+        return 6.0 * n_body * B * S + 3.0 * attn_tr
+    if shape.kind == "prefill":
+        return 2.0 * n_body * B * S + attn_tr
+    return 2.0 * n_body * B + attn_dec

@@ -1,0 +1,79 @@
+"""Batched serving engine: continuous prefill + decode over a KV cache.
+
+A deliberately compact vLLM-style loop: requests are admitted into a fixed
+batch of slots; prefill fills a slot's cache region; every engine step
+decodes one token for all active slots. Caches live donated on device; the
+decode step is a single jit'd program (one serve_step per token).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import zoo
+from repro.models.module import init_from_specs
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (S,) token ids
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, mesh, batch_slots: int = 4,
+                 max_len: int = 512, prompt_len: int = 64):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.B = batch_slots
+        self.max_len = max_len
+        self.prompt_len = prompt_len
+        cspecs = zoo.build_cache_specs(cfg, batch_slots, max_len)
+        self.caches = init_from_specs(cspecs, jax.random.PRNGKey(0))
+        self.cur_len = 0
+        self.slots: list[Request | None] = [None] * batch_slots
+
+        def _prefill(params, batch, caches):
+            return zoo.prefill(cfg, params, batch, caches, mesh=mesh)
+
+        def _decode(params, tokens, caches, cur_len):
+            return zoo.decode_step(cfg, params, tokens, caches, cur_len,
+                                   mesh=mesh)
+
+        self._prefill = jax.jit(_prefill, donate_argnums=(2,))
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request], greedy: bool = True):
+        """Serve a batch of requests to completion (batched prefill+decode)."""
+        assert len(requests) <= self.B
+        S = self.prompt_len
+        prompts = np.zeros((self.B, S), np.int32)
+        for i, r in enumerate(requests):
+            p = r.prompt[-S:]
+            prompts[i, S - len(p):] = p
+        with jax.set_mesh(self.mesh):
+            logits, self.caches = self._prefill(
+                self.params, {"tokens": jnp.asarray(prompts)}, self.caches)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.cur_len = S
+            max_new = max(r.max_new_tokens for r in requests)
+            for step in range(max_new):
+                for i, r in enumerate(requests):
+                    if len(r.out_tokens) < r.max_new_tokens:
+                        r.out_tokens.append(int(tok[i]))
+                logits, self.caches = self._decode(
+                    self.params, tok[:, None], self.caches,
+                    jnp.int32(self.cur_len))
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                self.cur_len += 1
+        for r in requests:
+            r.done = True
+        return requests

@@ -1,0 +1,93 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Models annotate params/activations with logical axes; the rules map them to
+mesh axes with divisibility fallback (an axis that does not divide evenly is
+replicated rather than producing an invalid sharding). Mesh axes:
+
+  'pod'   outer data-parallel axis across pods (2 pods in the multi-pod mesh)
+  'data'  data parallel within a pod
+  'model' tensor/expert parallel (heads / d_ff / experts / vocab)
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (tuples = combined mesh axes)
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,            # sequence replicated by default (SP variants remap)
+    "seq_model": "model",   # sequence-parallel residual stream (beyond-paper opt)
+    "kv_seq": "model",      # decode KV cache sharded along sequence (split-KV)
+    "embed": "data",        # FSDP/ZeRO-3: params 2D-sharded (data x model);
+                            # GSPMD all-gathers weights per layer
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,       # kv heads often < TP degree; seq dim shards instead
+    "mlp": "model",         # d_ff
+    "expert": "model",
+    "layers": None,
+    "state": None,
+}
+
+
+def mesh_axes_of(mesh: Mesh) -> set[str]:
+    return set(mesh.axis_names)
+
+
+def spec_for(axes: tuple[str | None, ...] | None, shape: tuple[int, ...],
+             mesh: Mesh, rules: dict | None = None) -> P:
+    """PartitionSpec from logical axes, with divisibility fallback."""
+    if axes is None:
+        return P()
+    rules = rules or DEFAULT_RULES
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    entries = []
+    used: set[str] = set()
+    for dim, logical in zip(shape, axes):
+        if logical is None:
+            entries.append(None)
+            continue
+        mapped = rules.get(logical)
+        if mapped is None:
+            entries.append(None)
+            continue
+        maxes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        maxes = tuple(a for a in maxes if a in sizes and a not in used)
+        total = 1
+        for a in maxes:
+            total *= sizes[a]
+        if not maxes or dim % total != 0:
+            entries.append(None)  # replicate when not evenly divisible
+            continue
+        used.update(maxes)
+        entries.append(maxes if len(maxes) > 1 else maxes[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def sharding_for(axes, shape, mesh: Mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(axes, shape, mesh, rules))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules=None):
+    """NamedSharding tree for a ParamSpec tree."""
+    from repro.models.module import is_spec
+    return jax.tree.map(
+        lambda s: sharding_for(s.axes, s.shape, mesh, rules), spec_tree,
+        is_leaf=is_spec)
+
+
+def constrain(x, mesh: Mesh | None, *axes, rules=None):
+    """with_sharding_constraint by logical axes.
+
+    No-op when mesh is None (e.g. inside shard_map bodies, where axes are
+    already manual and constraints are meaningless)."""
+    if mesh is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, sharding_for(tuple(axes), x.shape, mesh, rules))
+    except ValueError:
+        return x

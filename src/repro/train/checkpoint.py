@@ -1,0 +1,144 @@
+"""Sharded, mesh-agnostic checkpointing (no orbax in this environment).
+
+Layout: one directory per step:
+    step_000100/
+      manifest.json         # tree structure, shapes, dtypes, leaf -> file map
+      leaf_00000.npz.zst    # zstd-compressed npy payloads (grouped)
+Writes are atomic (tmp dir + rename) and optionally asynchronous (background
+thread). Restore reshapes onto ANY mesh: the manifest stores global shapes;
+arrays are rebuilt host-side and re-sharded by the caller's shardings —
+this is what makes elastic re-mesh restarts possible.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import zstandard
+
+_FLUSH_GROUP_BYTES = 64 << 20
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    return [("/".join(str(k) for k in path), leaf) for path, leaf in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True) -> str:
+    """Serialize a pytree of arrays; returns the checkpoint path."""
+    flat, _ = _flatten_with_paths(tree)
+
+    def to_host(leaf):
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)          # original dtype goes in the manifest
+        if arr.dtype == jnp.bfloat16:   # npz has no bf16: store a u16 view
+            arr = arr.view(np.uint16)
+        return arr, dtype
+
+    host = [(path,) + to_host(leaf) for path, leaf in flat]
+
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+
+    def _write():
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        cctx = zstandard.ZstdCompressor(level=3)
+        group, group_bytes, gid = {}, 0, 0
+
+        def flush():
+            nonlocal group, group_bytes, gid
+            if not group:
+                return
+            fname = f"group_{gid:05d}.npz.zst"
+            import io
+            buf = io.BytesIO()
+            np.savez(buf, **group)
+            with open(os.path.join(tmp, fname), "wb") as f:
+                f.write(cctx.compress(buf.getvalue()))
+            gid += 1
+            group, group_bytes = {}, 0
+
+        for i, (path, arr, dtype) in enumerate(host):
+            key = f"a{i:06d}"
+            manifest["leaves"].append({
+                "path": path, "key": key, "file": f"group_{gid:05d}.npz.zst",
+                "shape": list(arr.shape), "dtype": dtype})
+            group[key] = arr
+            group_bytes += arr.nbytes
+            if group_bytes >= _FLUSH_GROUP_BYTES:
+                flush()
+        flush()
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+
+    if blocking:
+        _write()
+    else:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        t.join(0)  # fire and forget; caller may join via wait_for_async
+        _ASYNC_THREADS.append(t)
+    return final
+
+
+_ASYNC_THREADS: list[threading.Thread] = []
+
+
+def wait_for_async():
+    for t in _ASYNC_THREADS:
+        t.join()
+    _ASYNC_THREADS.clear()
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree=None, shardings=None):
+    """Load a checkpoint; optionally re-shard onto `shardings` (any mesh)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    dctx = zstandard.ZstdDecompressor()
+    cache: dict[str, dict] = {}
+    leaves_by_path = {}
+    for meta in manifest["leaves"]:
+        if meta["file"] not in cache:
+            import io
+            with open(os.path.join(path, meta["file"]), "rb") as f:
+                data = dctx.decompress(f.read())
+            cache[meta["file"]] = dict(np.load(io.BytesIO(data)))
+        arr = cache[meta["file"]][meta["key"]]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16) if arr.dtype == np.uint16 else \
+                arr.astype(jnp.bfloat16)
+        leaves_by_path[meta["path"]] = arr
+
+    if like_tree is None:
+        return leaves_by_path
+
+    flat, treedef = _flatten_with_paths(like_tree)
+    out = []
+    flat_sh = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None)
+               if shardings is not None else [None] * len(flat))
+    for (pathkey, like), sh in zip(flat, flat_sh):
+        arr = leaves_by_path[pathkey]
+        arr = jnp.asarray(arr, dtype=like.dtype)
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,128 @@
+"""Training step factory: loss -> grads -> (optional int8 error-feedback
+gradient compression) -> AdamW, with microbatched gradient accumulation.
+
+Distribution notes:
+  * params/optimizer are 2D-sharded (FSDP x TP) via ParamSpec logical axes;
+    GSPMD inserts the per-layer weight all-gathers and gradient
+    reduce-scatters, overlapped by the latency-hiding scheduler on TPU.
+  * gradient compression quantizes gradients to int8 with a per-tensor scale
+    and keeps the quantization error as carry-over (error feedback) — the
+    numerics of a compressed all-reduce; on real multi-pod hardware the
+    int8 tensors are what crosses the inter-pod links.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import zoo
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    grad_compress: bool = False    # int8 + error feedback
+    opt: AdamWConfig = AdamWConfig()
+
+
+def _quantize_int8(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_grads(grads, ef):
+    """int8 error-feedback compression: returns (decompressed grads, new ef)."""
+    def one(g, e):
+        gf = g.astype(F32) + e
+        q, scale = _quantize_int8(gf)
+        deq = q.astype(F32) * scale
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+            jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+
+def init_train_state(cfg: ArchConfig, params, step_cfg: TrainStepConfig):
+    state = init_opt_state(params)
+    if step_cfg.grad_compress:
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return state
+
+
+def train_state_specs(param_specs, step_cfg: TrainStepConfig):
+    from repro.train.optimizer import opt_state_specs
+    from repro.models.module import ParamSpec, spec_tree_map
+    specs = opt_state_specs(param_specs)
+    if step_cfg.grad_compress:
+        specs["ef"] = spec_tree_map(
+            lambda s: ParamSpec(s.shape, F32, s.axes, init="zeros"), param_specs)
+    return specs
+
+
+def make_train_step(cfg: ArchConfig, mesh, step_cfg: TrainStepConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics)."""
+
+    def loss_fn(params, batch):
+        return zoo.train_loss(cfg, params, batch, mesh=mesh,
+                              remat=step_cfg.remat)
+
+    def grads_of(params, batch):
+        mb = step_cfg.microbatches
+        if mb <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+        # microbatch accumulation: split the global batch on axis 0
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:]) \
+                if x.ndim >= 1 and x.shape[0] % mb == 0 else \
+                jnp.broadcast_to(x, (mb,) + x.shape)
+
+        def split_batch(b):
+            out = {}
+            for k, v in b.items():
+                if k == "mrope_positions":  # (3, B, S): split on dim 1
+                    out[k] = jnp.moveaxis(
+                        v.reshape(v.shape[0], mb, -1, v.shape[2]), 1, 0)
+                else:
+                    out[k] = split(v)
+            return out
+
+        mbs = split_batch(batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+        def body(carry, mb_batch):
+            loss_acc, g_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb_batch)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(F32), g_acc, grads)
+            return (loss_acc + loss, g_acc), None
+
+        (loss, gsum), _ = jax.lax.scan(body, (jnp.zeros((), F32), zero), mbs)
+        grads = jax.tree.map(lambda g: (g / mb).astype(cfg.dtype), gsum)
+        return loss / mb, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if step_cfg.grad_compress:
+            grads, new_ef = compress_grads(grads, opt_state["ef"])
+        state = {k: v for k, v in opt_state.items() if k != "ef"}
+        new_params, new_state, metrics = adamw_update(
+            step_cfg.opt, params, grads, state)
+        if step_cfg.grad_compress:
+            new_state["ef"] = new_ef
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,6 @@
+import os
+
+# Multi-device tests (sharding / pipeline / MoE) need a handful of host
+# devices. NOT the 512-device production setting — that is exclusively
+# launch/dryrun.py's business; 8 keeps smoke tests fast and memory small.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

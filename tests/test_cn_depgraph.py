@@ -1,0 +1,110 @@
+"""CN identification (Step 1) and dependency-graph generation (Step 2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cn import cns_by_layer, identify_cns
+from repro.core.depgraph import build_cn_graph
+from repro.core.workload import Workload
+from repro.configs.paper_workloads import resnet18, fsrcnn
+
+
+def _conv_net(oy=32, ox=32, k=8, c=3, f=3, stride=1):
+    w = Workload("t")
+    a = w.add("c1", "conv", {"K": k, "C": c, "OY": oy, "OX": ox,
+                             "FY": f, "FX": f}, stride=stride, padding=f // 2)
+    w.add("c2", "conv", {"K": k, "C": k, "OY": oy // stride, "OX": ox // stride,
+                         "FY": f, "FX": f}, padding=f // 2, inputs=(a,))
+    return w
+
+
+def test_fc_single_cn():
+    w = Workload("t")
+    w.add("fc", "fc", {"K": 10, "C": 20})
+    cns = identify_cns(w, "line")
+    assert len(cns) == 1  # topology awareness: full fan-in breaks fusion
+
+
+@given(st.integers(4, 64), st.sampled_from([1, 3, 5]), st.integers(1, 2))
+@settings(max_examples=25, deadline=None)
+def test_cn_outputs_partition_layer(oy, f, stride):
+    w = _conv_net(oy=oy, ox=8, f=f, stride=stride)
+    cns = identify_cns(w, "line")
+    for lid, layer_cns in cns_by_layer(cns).items():
+        layer = w.layers[lid]
+        total = sum(cn.new_outputs for cn in layer_cns)
+        assert total == layer.out_elems  # outputs partition exactly
+        covered = sorted((cn.out_rect.as_dict()["OY"]) for cn in layer_cns)
+        assert covered[0][0] == 0 and covered[-1][1] == layer.d("OY")
+        for (a0, b0), (a1, b1) in zip(covered, covered[1:]):
+            assert b0 == a1  # contiguous, non-overlapping
+
+
+@given(st.integers(6, 48), st.sampled_from([1, 3, 5]))
+@settings(max_examples=20, deadline=None)
+def test_discardable_inputs_telescope(oy, f):
+    """Sum of exclusive input volumes == total input volume (each input
+    element is discarded exactly once)."""
+    w = _conv_net(oy=oy, ox=8, f=f)
+    cns = identify_cns(w, "line")
+    by_layer = cns_by_layer(cns)
+    layer = w.layers[1]  # consumer conv
+    total_disc = sum(cn.discardable_inputs for cn in by_layer[1])
+    b, cin, iy, ix = layer.in_shape
+    assert total_disc == b * cin * iy * ix
+    total_new = sum(cn.new_inputs for cn in by_layer[1])
+    assert total_new == b * cin * iy * ix
+
+
+def test_interlayer_edges_cover_receptive_field():
+    w = _conv_net(oy=16, ox=8, f=3)
+    cns = identify_cns(w, "line")
+    g = build_cn_graph(w, cns)
+    by_layer = cns_by_layer(cns)
+    # every consumer line needs >= 2 producer lines (3-tap kernel), with
+    # boundary rows needing 2 and interior rows 3
+    for cn in by_layer[1]:
+        data_preds = [u for u in g.preds[cn.id]
+                      if g.edge_bytes[(u, cn.id)] > 0]
+        assert 2 <= len(data_preds) <= 3
+
+
+def test_rtree_and_bruteforce_graphs_identical():
+    w = _conv_net(oy=24, ox=24, f=3)
+    cns = identify_cns(w, ("tile", 8, 4))
+    g1 = build_cn_graph(w, cns, use_rtree=True)
+    g2 = build_cn_graph(w, cns, use_rtree=False)
+    assert g1.edge_bytes == g2.edge_bytes
+
+
+def test_graph_is_acyclic_topological():
+    w = resnet18()
+    cns = identify_cns(w, ("tile", 8, 1))
+    g = build_cn_graph(w, cns)
+    # Kahn's algorithm completes
+    indeg = np.array([len(p) for p in g.preds])
+    order = [i for i in range(len(g.cns)) if indeg[i] == 0]
+    seen = 0
+    while order:
+        u = order.pop()
+        seen += 1
+        for v in g.succs[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                order.append(v)
+    assert seen == len(g.cns)
+
+
+def test_hw_aware_min_tile():
+    from repro.core.stream_api import hw_min_tiles
+    from repro.hw.catalog import sc_eye
+    acc = sc_eye()
+    tiles = hw_min_tiles(acc)
+    assert tiles["OX"] == 256  # Eyeriss-like OX-256 unrolling constrains CNs
+    w = _conv_net(oy=16, ox=64)
+    cns = identify_cns(w, "line", tiles)
+    for cn in cns:
+        a, b = cn.out_rect.as_dict()["OX"]
+        assert b - a == 64  # OX not split below the unroll

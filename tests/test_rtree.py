@@ -1,0 +1,49 @@
+"""R-tree (Stream Step 2 substrate): property tests vs brute force."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rtree import RTree, brute_force_query
+
+
+def _random_boxes(rng, n, d, span=100, max_ext=10):
+    lo = rng.integers(0, span, size=(n, d))
+    ext = rng.integers(1, max_ext + 1, size=(n, d))
+    return np.stack([lo, lo + ext], axis=-1)
+
+
+@given(st.integers(1, 400), st.integers(1, 4), st.integers(0, 10 ** 6))
+@settings(max_examples=40, deadline=None)
+def test_rtree_matches_bruteforce(n, d, seed):
+    rng = np.random.default_rng(seed)
+    boxes = _random_boxes(rng, n, d)
+    tree = RTree(boxes, fanout=8)
+    for _ in range(5):
+        q = _random_boxes(rng, 1, d, max_ext=20)[0]
+        got = np.sort(tree.query(q))
+        want = np.sort(brute_force_query(boxes, q))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_rtree_empty_query():
+    rng = np.random.default_rng(0)
+    boxes = _random_boxes(rng, 50, 2)
+    tree = RTree(boxes)
+    # query far outside
+    q = np.array([[10_000, 10_001], [10_000, 10_001]])
+    assert tree.query(q).size == 0
+
+
+def test_rtree_degenerate_overlapping():
+    # all boxes identical: every query hitting them returns all ids
+    boxes = np.tile(np.array([[[5, 8], [5, 8]]]), (64, 1, 1))
+    tree = RTree(boxes, fanout=4)
+    q = np.array([[6, 7], [6, 7]])
+    assert tree.query(q).size == 64
+
+
+def test_rtree_half_open_semantics():
+    boxes = np.array([[[0, 5], [0, 5]]])
+    tree = RTree(boxes)
+    assert tree.query(np.array([[5, 6], [0, 1]])).size == 0  # touching edge
+    assert tree.query(np.array([[4, 5], [0, 1]])).size == 1

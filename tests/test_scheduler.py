@@ -1,0 +1,136 @@
+"""Stream Step 5 scheduler invariants + GA (Step 4) behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_workloads import resnet18, squeezenet
+from repro.core import CostModel, build_graph, evaluate_allocation, explore
+from repro.core.allocator import feasible_cores_per_layer, manual_pingpong
+from repro.core.ga import GeneticAllocator, crowding_distance, \
+    fast_nondominated_sort
+from repro.core.scheduler import schedule
+from repro.hw.catalog import mc_hetero, mc_hom_tpu, sc_tpu
+
+
+@pytest.fixture(scope="module")
+def r18_setup():
+    w = resnet18()
+    acc = mc_hom_tpu()
+    g = build_graph(w, acc, ("tile", 32, 1))
+    return w, acc, g
+
+
+def _check_invariants(g, res, w):
+    # 1. cores never execute two CNs at once
+    for core_iv in res.core_intervals:
+        ordered = sorted(core_iv)
+        for (s0, e0, _), (s1, e1, _) in zip(ordered, ordered[1:]):
+            assert s1 >= e0 - 1e-6
+    # 2. every CN scheduled exactly once
+    n = sum(len(iv) for iv in res.core_intervals)
+    assert n == len(g.cns)
+    # 3. dependencies respected (start >= preds' finish)
+    start, end = {}, {}
+    for core_iv in res.core_intervals:
+        for s, e, i in core_iv:
+            start[i], end[i] = s, e
+    for (u, v), nbytes in g.edge_bytes.items():
+        assert start[v] >= end[u] - 1e-6
+    # 4. latency = max finish
+    assert res.latency_cc >= max(end.values()) - 1e-6
+
+
+def test_schedule_invariants(r18_setup):
+    w, acc, g = r18_setup
+    cm = CostModel(w, acc)
+    alloc = manual_pingpong(w, acc)
+    for prio in ("latency", "memory"):
+        res = schedule(g, cm, alloc, acc, prio)
+        _check_invariants(g, res, w)
+        assert res.energy_pj > 0 and res.peak_mem_bytes > 0
+
+
+def test_memory_priority_trades_latency_for_memory(r18_setup):
+    w, acc, g = r18_setup
+    cm = CostModel(w, acc)
+    alloc = manual_pingpong(w, acc)
+    lat = schedule(g, cm, alloc, acc, "latency")
+    mem = schedule(g, cm, alloc, acc, "memory")
+    assert mem.act_peak_bytes <= lat.act_peak_bytes * 1.05
+    assert lat.latency_cc <= mem.latency_cc * 1.05
+
+
+def test_strict_layer_by_layer_is_serial():
+    w = squeezenet()
+    acc = mc_hom_tpu()
+    res = evaluate_allocation(w, acc, manual_pingpong(w, acc),
+                              granularity="layer")
+    # strict LBL: compute intervals never overlap ACROSS cores either
+    ivs = sorted((s, e) for core in res.core_intervals for s, e, _ in core)
+    for (s0, e0), (s1, e1) in zip(ivs, ivs[1:]):
+        assert s1 >= e0 - 1e-6
+
+
+def test_fused_beats_layer_by_layer_edp():
+    w = resnet18()
+    acc = mc_hetero()
+    lbl = explore(w, acc, granularity="layer", pop_size=8, generations=4)
+    fused = explore(w, acc, granularity=("tile", 16, 1), pop_size=8,
+                    generations=4)
+    assert fused.edp < lbl.edp  # the paper's central claim
+
+
+def test_energy_conservation_breakdown(r18_setup):
+    w, acc, g = r18_setup
+    cm = CostModel(w, acc)
+    res = schedule(g, cm, manual_pingpong(w, acc), acc, "latency")
+    assert abs(sum(res.energy_breakdown.values()) - res.energy_pj) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II machinery
+# ---------------------------------------------------------------------------
+
+def test_nondominated_sort_known_case():
+    objs = np.array([[1, 5], [2, 2], [5, 1], [3, 3], [6, 6]])
+    fronts = fast_nondominated_sort(objs)
+    assert sorted(fronts[0].tolist()) == [0, 1, 2]
+    assert sorted(fronts[1].tolist()) == [3]
+    assert sorted(fronts[2].tolist()) == [4]
+
+
+def test_crowding_distance_extremes_infinite():
+    objs = np.array([[0.0, 3], [1, 2], [2, 1], [3, 0]])
+    cd = crowding_distance(objs)
+    assert np.isinf(cd[0]) and np.isinf(cd[3])
+    assert np.isfinite(cd[1]) and np.isfinite(cd[2])
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_ga_never_worse_than_initial(seed):
+    """GA seeded with a genome must return something at least as good."""
+    rng = np.random.default_rng(seed)
+    target = rng.integers(0, 3, size=12)
+
+    def evaluate(g):
+        return (float(np.sum(g != target)) + 1.0,)
+
+    ga = GeneticAllocator(12, [[0, 1, 2]] * 12, evaluate, pop_size=12,
+                          generations=8, seed=seed,
+                          scalarize=lambda o: float(o[0]))
+    init = rng.integers(0, 3, size=12)
+    res = ga.run(initial=[init])
+    assert evaluate(res.best_genome)[0] <= evaluate(init)[0]
+
+
+def test_ga_beats_manual_on_heterogeneous():
+    """Paper Fig. 12: automatic allocation >= manual on MC:Hetero."""
+    w = resnet18()
+    acc = mc_hetero()
+    from repro.core.allocator import manual_best_fit
+    manual = manual_best_fit(w, acc, CostModel(w, acc))
+    res_m = evaluate_allocation(w, acc, manual, granularity=("tile", 16, 1))
+    res_ga = explore(w, acc, granularity=("tile", 16, 1), pop_size=10,
+                     generations=6, initial_allocations=[manual])
+    assert res_ga.edp <= res_m.edp * 1.001
