@@ -3,55 +3,96 @@ roofline/planner/kernel benches.
 
   PYTHONPATH=src python -m benchmarks.run           # quick mode
   PYTHONPATH=src python -m benchmarks.run --full    # full GA budgets
+  PYTHONPATH=src python -m benchmarks.run --only exploration
+
+Each bench module is imported lazily (a missing optional dependency fails
+that bench alone, not the suite) and its wall time + returned metrics are
+written to ``BENCH_<slug>.json`` so the performance trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import json
 import time
+
+
+def _jsonable(obj):
+    """Best-effort conversion of bench results to JSON (tuple keys become
+    'a/b' strings, numpy scalars/arrays become numbers/lists)."""
+    if isinstance(obj, dict):
+        return {"/".join(map(str, k)) if isinstance(k, tuple) else str(k):
+                _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "tolist"):  # numpy array / scalar
+        return _jsonable(obj.tolist())
+    if hasattr(obj, "item"):
+        return obj.item()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
+
+
+# (slug, human name, module, run kwargs builder)
+BENCHES = [
+    ("validation", "validation (paper Table I)",
+     "benchmarks.bench_validation", lambda a: {}),
+    ("rtree", "rtree (paper Sec. III-B)",
+     "benchmarks.bench_rtree", lambda a: {"full": a.full}),
+    ("scheduler_priority", "scheduler priority (paper Fig. 7)",
+     "benchmarks.bench_scheduler_priority", lambda a: {}),
+    ("scheduler_throughput", "scheduler throughput (engine vs seed impl)",
+     "benchmarks.bench_scheduler_throughput", lambda a: {"full": a.full}),
+    ("ga_allocation", "ga allocation (paper Fig. 12)",
+     "benchmarks.bench_ga_allocation", lambda a: {"full": a.full}),
+    ("granularity", "granularity co-exploration (paper Fig. 4)",
+     "benchmarks.bench_granularity", lambda a: {}),
+    ("exploration", "exploration (paper Figs. 13-15)",
+     "benchmarks.bench_exploration", lambda a: {"full": a.full}),
+    ("kernels", "kernels (Pallas blocks)",
+     "benchmarks.bench_kernels", lambda a: {}),
+    ("pipeline_plan", "pipeline planner (beyond-paper)",
+     "benchmarks.bench_pipeline_plan", lambda a: {}),
+    ("roofline_1pod", "roofline single-pod (dry-run reports)",
+     "benchmarks.bench_roofline", lambda a: {"mesh": "16x16"}),
+    ("roofline_2pod", "roofline multi-pod (dry-run reports)",
+     "benchmarks.bench_roofline", lambda a: {"mesh": "2x16x16"}),
+]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing BENCH_<slug>.json files")
     args = ap.parse_args()
 
-    from benchmarks import (bench_exploration, bench_ga_allocation,
-                            bench_granularity, bench_kernels,
-                            bench_pipeline_plan, bench_roofline, bench_rtree,
-                            bench_scheduler_priority, bench_validation)
-
-    benches = [
-        ("validation (paper Table I)", lambda: bench_validation.run()),
-        ("rtree (paper Sec. III-B)", lambda: bench_rtree.run(full=args.full)),
-        ("scheduler priority (paper Fig. 7)",
-         lambda: bench_scheduler_priority.run()),
-        ("ga allocation (paper Fig. 12)",
-         lambda: bench_ga_allocation.run(full=args.full)),
-        ("granularity co-exploration (paper Fig. 4)",
-         lambda: bench_granularity.run()),
-        ("exploration (paper Figs. 13-15)",
-         lambda: bench_exploration.run(full=args.full)),
-        ("kernels (Pallas blocks)", lambda: bench_kernels.run()),
-        ("pipeline planner (beyond-paper)", lambda: bench_pipeline_plan.run()),
-        ("roofline single-pod (dry-run reports)",
-         lambda: bench_roofline.run(mesh="16x16")),
-        ("roofline multi-pod (dry-run reports)",
-         lambda: bench_roofline.run(mesh="2x16x16")),
-    ]
     t00 = time.perf_counter()
     failures = []
-    for name, fn in benches:
-        if args.only and args.only not in name:
+    for slug, name, module, kwargs_of in BENCHES:
+        if args.only and args.only not in name and args.only not in slug:
             continue
         print(f"\n{'=' * 72}\n# {name}\n{'=' * 72}", flush=True)
         t0 = time.perf_counter()
+        result, error = None, None
         try:
-            fn()
+            mod = importlib.import_module(module)
+            result = mod.run(**kwargs_of(args))
         except Exception as e:  # keep the suite going; report at the end
             print(f"BENCH FAILED: {name}: {e!r}", flush=True)
             failures.append(name)
-        print(f"[{name}: {time.perf_counter() - t0:.1f}s]", flush=True)
+            error = repr(e)
+        wall = time.perf_counter() - t0
+        print(f"[{name}: {wall:.1f}s]", flush=True)
+        if not args.no_json:
+            payload = {"bench": slug, "name": name, "wall_s": wall,
+                       "mode": "full" if args.full else "quick",
+                       "error": error, "metrics": _jsonable(result)}
+            with open(f"BENCH_{slug}.json", "w") as f:
+                json.dump(payload, f, indent=2)
     print(f"\ntotal: {time.perf_counter() - t00:.1f}s"
           + (f"  FAILURES: {failures}" if failures else "  (all benches ok)"))
 

@@ -3,16 +3,18 @@ from repro.core.workload import Layer, Workload
 from repro.core.cn import CN, identify_cns, cns_by_layer
 from repro.core.rtree import RTree, brute_force_query
 from repro.core.depgraph import CNGraph, build_cn_graph
-from repro.core.costmodel import CostModel
+from repro.core.costmodel import CostModel, CostTables
 from repro.core.ga import GeneticAllocator, GAResult
-from repro.core.scheduler import ScheduleResult, schedule
+from repro.core.scheduler import (ScheduleEngine, ScheduleResult, schedule,
+                                  schedule_reference)
 from repro.core.memtrace import trace, peak_memory
 from repro.core.stream_api import StreamResult, explore, evaluate_allocation, build_graph
 
 __all__ = [
     "Layer", "Workload", "CN", "identify_cns", "cns_by_layer",
     "RTree", "brute_force_query", "CNGraph", "build_cn_graph",
-    "CostModel", "GeneticAllocator", "GAResult", "ScheduleResult", "schedule",
+    "CostModel", "CostTables", "GeneticAllocator", "GAResult",
+    "ScheduleEngine", "ScheduleResult", "schedule", "schedule_reference",
     "trace", "peak_memory", "StreamResult", "explore", "evaluate_allocation",
     "build_graph",
 ]

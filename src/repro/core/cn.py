@@ -77,8 +77,13 @@ class CN:
         return self.new_outputs * self.out_bits // 8
 
     def size_signature(self) -> tuple:
-        """CNs with equal signatures have identical mapping cost (Step 3 cache key)."""
-        return (self.layer, tuple(sorted(self.out_rect.as_dict().items())))
+        """CNs with equal signatures have identical mapping cost (Step 3 cache key).
+
+        Keyed on loop EXTENTS, not absolute ranges: the intra-core mapping
+        cost only sees `stop - start` per dim, so e.g. all interior row-bands
+        of a layer collapse to one signature and are costed once.
+        """
+        return (self.layer, tuple(sorted((d, b - a) for d, a, b in self.out_rect.ranges)))
 
 
 def _split_ranges(extent: int, parts: int) -> list[tuple[int, int]]:
@@ -137,18 +142,73 @@ def identify_cns(
     granularity="line",
     min_tile: Mapping[str, int] | None = None,
 ) -> list[CN]:
-    """Split every layer of `workload` into CNs (Stream Step 1)."""
+    """Split every layer of `workload` into CNs (Stream Step 1).
+
+    All per-dimension work (receptive ranges, exclusive/fresh extents,
+    output fractions) is precomputed once per layer and position; the
+    per-CN loop only combines the per-position lookups, so splitting a
+    layer into k CNs is O(k), not O(k x dims x receptive math).
+    """
     cns: list[CN] = []
     for lid in workload.topo_order():
         layer = workload.layers[lid]
         splits = resolve_splits(layer, granularity, min_tile)
         dims = [d for d in SPLITTABLE if d in splits]
-        ranges_per_dim = {d: _split_ranges(layer.d(d), splits[d]) for d in dims}
-        grid = [len(ranges_per_dim[d]) for d in dims]
-        n_cn = math.prod(grid) if grid else 1
         _, _, iy_ext, ix_ext = layer.in_shape
         total_out = layer.out_elems
         layer_macs = layer.macs
+        b_ext, k_ext, c_ext = layer.d("B"), layer.d("K"), layer.d("C")
+        stride, pad = layer.stride, layer.padding
+        wb, bits, op = layer.weight_bytes, layer.bits, layer.op
+
+        # ---- per-dim precomputation (positions along each splittable dim) --
+        # Every SPLITTABLE dim has a list of output ranges (length 1 when not
+        # split), their input receptive ranges, the exclusive / fresh input
+        # extents per position (paper Fig. 5), and the output fraction.
+        out_rng: dict[str, list[tuple[int, int]]] = {}
+        rcv: dict[str, list[tuple[int, int]]] = {}
+        ext_excl: dict[str, list[int]] = {}
+        ext_new: dict[str, list[int]] = {}
+        frac_of: dict[str, list[float]] = {}
+        for d in SPLITTABLE:
+            tot = layer.d(d)
+            rs = _split_ranges(tot, splits[d]) if d in splits else [(0, tot)]
+            fsize = layer.d("FY" if d == "OY" else "FX")
+            in_ext = iy_ext if d == "OY" else ix_ext
+            rc = [_receptive(r, stride, fsize, pad, in_ext) for r in rs]
+            xs, ns = [], []
+            for pos, (a, b) in enumerate(rc):
+                e_excl = e_new = max(0, b - a)
+                if pos + 1 < len(rc):
+                    e_excl = max(0, min(b, rc[pos + 1][0]) - a)
+                if pos > 0:
+                    e_new = max(0, b - max(a, rc[pos - 1][1]))
+                xs.append(e_excl)
+                ns.append(e_new)
+            out_rng[d], rcv[d] = rs, rc
+            ext_excl[d], ext_new[d] = xs, ns
+            frac_of[d] = [(b - a) / tot for a, b in rs]
+        grid = [len(out_rng[d]) for d in dims]
+        n_cn = math.prod(grid) if grid else 1
+
+        # per-producer K ranges (CN-independent): consumer input space; concat
+        # rects carry the channel offset of each producer within the
+        # concatenated K axis, so per-producer claims partition [0, K)
+        # instead of all aliasing [0, pk)
+        producers = layer.inputs if layer.inputs else (-1,)
+        prod_k: list[tuple[int, int, int]] = []  # (producer, ka, kb)
+        ch_off = 0
+        for p in producers:
+            if op == "concat":
+                pk = workload.layers[p].d("K") if p >= 0 else c_ext
+                prod_k.append((p, ch_off, ch_off + pk))
+                ch_off += pk
+            elif op in ("dwconv", "pool", "add"):
+                prod_k.append((p, 0, k_ext))
+            else:  # conv / fc need all input channels
+                prod_k.append((p, 0, c_ext))
+        sum_k = sum(kb - ka for _, ka, kb in prod_k)
+        b_clamped = max(0, b_ext)
 
         for rank in range(n_cn):
             # decode row-major multi-index
@@ -157,72 +217,33 @@ def identify_cns(
                 idx.append(rem % g)
                 rem //= g
             idx = tuple(reversed(idx))
+            pos = dict(zip(dims, idx))
+            pos_oy, pos_ox = pos.get("OY", 0), pos.get("OX", 0)
 
-            out_ranges: list[tuple[str, int, int]] = [
-                ("B", 0, layer.d("B")), ("K", 0, layer.d("K")),
-            ]
             frac = 1.0
-            per_dim_rng: dict[str, tuple[int, int]] = {}
             for d, i in zip(dims, idx):
-                a, b = ranges_per_dim[d][i]
-                per_dim_rng[d] = (a, b)
-                out_ranges.append((d, a, b))
-                frac *= (b - a) / layer.d(d)
-            for d in SPLITTABLE:
-                if d not in per_dim_rng:
-                    out_ranges.append((d, 0, layer.d(d)))
-                    per_dim_rng[d] = (0, layer.d(d))
-            out_rect = Rect(tuple(out_ranges))
+                frac *= frac_of[d][i]
+            oy_a, oy_b = out_rng["OY"][pos_oy]
+            ox_a, ox_b = out_rng["OX"][pos_ox]
+            out_rect = Rect((("B", 0, b_ext), ("K", 0, k_ext),
+                             ("OY", oy_a, oy_b), ("OX", ox_a, ox_b)))
 
-            # input rect per producer operand (in the producer's OUTPUT space)
-            iy = _receptive(per_dim_rng["OY"], layer.stride, layer.d("FY"), layer.padding, iy_ext)
-            ix = _receptive(per_dim_rng["OX"], layer.stride, layer.d("FX"), layer.padding, ix_ext)
-            in_rects: dict[int, Rect] = {}
-            producers = layer.inputs if layer.inputs else (-1,)
-            ch_off = 0
-            for p in producers:
-                if layer.op == "concat":
-                    pk = workload.layers[p].d("K") if p >= 0 else layer.d("C")
-                    in_rects[p] = Rect((("B", 0, layer.d("B")), ("K", 0, pk),
-                                        ("OY", iy[0], iy[1]), ("OX", ix[0], ix[1])))
-                    ch_off += pk
-                    continue
-                if layer.op in ("dwconv", "pool", "add"):
-                    ch = per_dim_rng.get("K", (0, layer.d("K")))
-                    ka, kb = 0, layer.d("K")
-                else:  # conv / fc need all input channels
-                    ka, kb = 0, layer.d("C")
-                in_rects[p] = Rect((("B", 0, layer.d("B")), ("K", ka, kb),
-                                    ("OY", iy[0], iy[1]), ("OX", ix[0], ix[1])))
+            # input rect per producer operand (consumer input space)
+            iy = rcv["OY"][pos_oy]
+            ix = rcv["OX"][pos_ox]
+            in_rects: dict[int, Rect] = {
+                p: Rect((("B", 0, b_ext), ("K", ka, kb),
+                         ("OY", iy[0], iy[1]), ("OX", ix[0], ix[1])))
+                for p, ka, kb in prod_k}
 
             # ---- attribute extraction (paper Fig. 5) -----------------------
             # exclusive input volume: Π_d extent-before-next-CN's-input-start
             # fresh input volume:     Π_d extent-after-prev-CN's-input-stop
-            discardable = 0
-            fresh = 0
-            for p, rect in in_rects.items():
-                rd = rect.as_dict()
-                vol_excl = 1
-                vol_new = 1
-                for d, (a, b) in rd.items():
-                    ext_excl = ext_new = max(0, b - a)
-                    if d in dims:
-                        i = dims.index(d)
-                        pos = idx[i]
-                        fdim = "FY" if d == "OY" else "FX"
-                        in_ext = iy_ext if d == "OY" else ix_ext
-                        if pos + 1 < grid[i]:
-                            nxt = _receptive(ranges_per_dim[d][pos + 1], layer.stride,
-                                             layer.d(fdim), layer.padding, in_ext)
-                            ext_excl = max(0, min(b, nxt[0]) - a)
-                        if pos > 0:
-                            prv = _receptive(ranges_per_dim[d][pos - 1], layer.stride,
-                                             layer.d(fdim), layer.padding, in_ext)
-                            ext_new = max(0, b - max(a, prv[1]))
-                    vol_excl *= ext_excl
-                    vol_new *= ext_new
-                discardable += vol_excl
-                fresh += vol_new
+            # (per-dim extents looked up from the per-position tables; the
+            # per-producer K extents factor out of the dim product)
+            base = b_clamped * sum_k
+            discardable = base * ext_excl["OY"][pos_oy] * ext_excl["OX"][pos_ox]
+            fresh = base * ext_new["OY"][pos_oy] * ext_new["OX"][pos_ox]
 
             macs = max(1, round(layer_macs * frac))
             new_out = max(1, round(total_out * frac)) if total_out else 0
@@ -231,7 +252,7 @@ def identify_cns(
                 id=len(cns), layer=lid, idx=idx, intra_rank=rank,
                 out_rect=out_rect, in_rects=in_rects, macs=macs,
                 discardable_inputs=discardable, new_inputs=fresh, new_outputs=new_out,
-                weight_bytes=layer.weight_bytes, in_bits=layer.bits, out_bits=layer.bits,
+                weight_bytes=wb, in_bits=bits, out_bits=bits,
             ))
     return cns
 

@@ -86,6 +86,7 @@ class GeneticAllocator:
         scalarize: Callable[[np.ndarray], float] | None = None,
         seed: int = 0,
         patience: int = 8,
+        cache_key: Callable[[np.ndarray], bytes] | None = None,
     ):
         self.n_genes = n_genes
         self.feasible = [np.asarray(f, dtype=np.int64) for f in feasible_cores]
@@ -100,6 +101,10 @@ class GeneticAllocator:
         self.scalarize = scalarize or (lambda o: float(np.prod(o)))
         self.rng = np.random.default_rng(seed)
         self.patience = patience
+        # memo key; callers may pass a canonicalizer that maps genomes
+        # equivalent under a fitness-preserving symmetry (e.g. permutations
+        # of identical cores) to one key, deduplicating their evaluations
+        self.cache_key = cache_key or (lambda g: g.tobytes())
         self._cache: dict[bytes, tuple[float, ...]] = {}
         self.evaluations = 0
 
@@ -131,7 +136,7 @@ class GeneticAllocator:
         return g
 
     def _eval(self, g: np.ndarray) -> tuple[float, ...]:
-        key = g.tobytes()
+        key = self.cache_key(g)
         hit = self._cache.get(key)
         if hit is None:
             hit = tuple(float(x) for x in self.evaluate(g))
@@ -149,10 +154,12 @@ class GeneticAllocator:
         stale = 0
         for _ in range(self.generations):
             # ---- variation: tournament parents -> offspring -----------------
+            # scalarize once per generation, not once per tournament comparison
+            scal = [self.scalarize(o) for o in objs]
             offspring = []
             while len(offspring) < self.pop_size:
                 i, j = self.rng.integers(0, len(pop), size=2)
-                parent = pop[i] if self.scalarize(objs[i]) <= self.scalarize(objs[j]) else pop[j]
+                parent = pop[i] if scal[i] <= scal[j] else pop[j]
                 child = parent.copy()
                 if self.rng.random() < self.crossover_p:
                     mate = pop[int(self.rng.integers(len(pop)))]

@@ -15,10 +15,20 @@ Two candidate-selection priorities (paper Fig. 8):
     (its data has waited in memory the longest) -> maximizes core utilization;
   * 'memory' : pick the candidate from the deepest layer -> consume data as
     deep into the fused stack as possible for early discarding.
+
+Two implementations share these semantics bit-for-bit:
+  * `ScheduleEngine` — the array-native hot path: consumes the CN graph's CSR
+    arrays and the cost model's dense tables, runs the event loop over flat
+    Python lists (no `CN` object access, no dict-keyed edge lookups), and
+    computes the memory peak with a vectorized cumulative trace. Build it
+    once per (graph, cost model) and reuse it across all GA evaluations.
+  * `schedule_reference` — the original object/dict implementation, kept as
+    the golden oracle for equivalence tests.
+`schedule()` keeps the seed's signature and dispatches to a `ScheduleEngine`
+cached on the graph.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 from collections import OrderedDict
 from typing import Sequence
@@ -31,19 +41,47 @@ from repro.hw.accelerator import Accelerator
 
 PREFETCH_DEPTH = 4.0  # external-input staging depth (quad-buffered prefetch)
 
+_KIND_ACT, _KIND_WEIGHT = 0, 1
+_KIND_NAMES = ("act", "weight")
 
-@dataclasses.dataclass
+
 class ScheduleResult:
-    latency_cc: float
-    energy_pj: float
-    energy_breakdown: dict[str, float]
-    peak_mem_bytes: float           # activations + resident weights
-    act_peak_bytes: float           # activations only (paper Step 5.2 trace)
-    mem_events: list[tuple[float, float, int, str]]  # (time, +/- bytes, core, kind)
-    core_intervals: list[list[tuple[float, float, int]]]  # per core: (start, end, cn)
-    comm_intervals: list[tuple[float, float, int, int, int]]  # (s, e, u, v, bytes)
-    dram_intervals: list[tuple[float, float, str, int]]       # (s, e, kind, bytes)
-    core_busy: np.ndarray
+    """Outcome of one multi-core schedule.
+
+    `mem_events` (the (time, +/- bytes, core, kind) trace of paper Step 5.2)
+    is materialized lazily from flat event buffers when the engine produced
+    the result, so genome evaluations that only read latency/energy never pay
+    for building the tuple list.
+    """
+
+    def __init__(self, latency_cc: float, energy_pj: float,
+                 energy_breakdown: dict[str, float], peak_mem_bytes: float,
+                 act_peak_bytes: float,
+                 core_intervals: list[list[tuple[float, float, int]]],
+                 comm_intervals: list[tuple[float, float, int, int, int]],
+                 dram_intervals: list[tuple[float, float, str, int]],
+                 core_busy: np.ndarray,
+                 mem_events: list[tuple[float, float, int, str]] | None = None,
+                 mem_buffers: tuple[list, list, list, list] | None = None):
+        self.latency_cc = latency_cc
+        self.energy_pj = energy_pj
+        self.energy_breakdown = energy_breakdown
+        self.peak_mem_bytes = peak_mem_bytes      # activations + resident weights
+        self.act_peak_bytes = act_peak_bytes      # activations only
+        self.core_intervals = core_intervals      # per core: (start, end, cn)
+        self.comm_intervals = comm_intervals      # (s, e, u, v, bytes)
+        self.dram_intervals = dram_intervals      # (s, e, kind, bytes)
+        self.core_busy = core_busy
+        self._mem_events = mem_events
+        self._mem_buffers = mem_buffers
+
+    @property
+    def mem_events(self) -> list[tuple[float, float, int, str]]:
+        if self._mem_events is None:
+            t, d, c, k = self._mem_buffers or ([], [], [], [])
+            self._mem_events = [(t[i], d[i], c[i], _KIND_NAMES[k[i]])
+                                for i in range(len(t))]
+        return self._mem_events
 
     @property
     def edp(self) -> float:
@@ -65,13 +103,19 @@ def compute_segments(workload, allocation, accelerator) -> np.ndarray:
     capacity get their own stack (weights stream exactly once).
     """
     alloc = np.asarray(allocation, dtype=np.int64)
+    weight_bytes = [layer.weight_bytes for layer in workload.layers.values()]
+    caps = [c.weight_mem_bytes for c in accelerator.cores]
+    return _segments_from_arrays(alloc.tolist(), weight_bytes, caps)
+
+
+def _segments_from_arrays(alloc: list[int], layer_weight_bytes: list[int],
+                          core_weight_caps: list[int]) -> np.ndarray:
     acc_w: dict[int, float] = {}
     seg = 0
-    seg_of = np.zeros(len(workload.layers), dtype=np.int64)
-    for lid, layer in workload.layers.items():
-        core = int(alloc[lid])
-        cap = accelerator.cores[core].weight_mem_bytes
-        wb = layer.weight_bytes
+    seg_of = np.zeros(len(layer_weight_bytes), dtype=np.int64)
+    for lid, wb in enumerate(layer_weight_bytes):
+        core = alloc[lid]
+        cap = core_weight_caps[core]
         if wb > 0 and cap > 0:
             hold = min(wb, cap)
             if acc_w.get(core, 0.0) + hold > cap and acc_w.get(core, 0.0) > 0:
@@ -80,6 +124,459 @@ def compute_segments(workload, allocation, accelerator) -> np.ndarray:
             acc_w[core] = acc_w.get(core, 0.0) + hold
         seg_of[lid] = seg
     return seg_of
+
+
+class ScheduleEngine:
+    """Precomputed array-native scheduling engine.
+
+    Binds one CN graph (CSR + attribute arrays) to one cost model's dense
+    tables and the accelerator's constants, all converted to flat Python
+    lists (fastest scalar access in the interpreter loop). `schedule()` is
+    then a pure event loop over these buffers — the intended use is one
+    engine shared by every genome evaluation of a GA run.
+    """
+
+    def __init__(self, graph: CNGraph, cost_model: CostModel,
+                 accelerator: Accelerator | None = None):
+        acc = accelerator or cost_model.accelerator
+        self.graph = graph
+        self.cost_model = cost_model
+        self.accelerator = acc
+        self.n = graph.n
+        tables = cost_model.precompute(graph, acc)
+        self.tables = tables
+
+        # per-CN x core cost rows: (cycles, e_compute, e_sram) or None when
+        # the core cannot run the CN — one index + unpack in the hot loop
+        cyc = tables.cycles[tables.sig_of_cn].tolist()
+        ecp = tables.e_compute[tables.sig_of_cn].tolist()
+        esr = tables.e_sram[tables.sig_of_cn].tolist()
+        feas = tables.feasible[tables.sig_of_cn].tolist()
+        self._cost_rows = [
+            [(cyc[i][c], ecp[i][c], esr[i][c]) if feas[i][c] else None
+             for c in range(acc.n_cores)]
+            for i in range(self.n)]
+
+        # CSR adjacency unpacked to per-CN tuples: one index + unpack per
+        # edge in the hot loop (insertion order preserved — bus FCFS order).
+        # Cached on the graph, so engines for different accelerators on the
+        # same graph share them.
+        hot = graph.hot_lists
+        self._pred_pairs = graph.pred_pairs
+        self._succ_of = graph.succ_tuples
+        self._indeg0 = hot["indeg"]
+        self._zeros_n = [0] * self.n
+        self._layer_arr = graph.layer                      # kept as ndarray for fancy indexing
+        self._layer_of = hot["layer"]
+        self._rank_of = hot["intra_rank"]
+        # heap tie-break (layer, intra_rank, cn) packed into one int: integer
+        # comparison of the codes is lexicographically identical to comparing
+        # the tuples, and the low bits recover the CN id (field width sized
+        # from n, since layer < n and intra_rank < n always hold)
+        bits = max(self.n.bit_length(), 1)
+        self._code_mask = (1 << bits) - 1
+        self._heap_code = [(l << (2 * bits)) | (r << bits) | i for i, (l, r) in
+                           enumerate(zip(self._layer_of, self._rank_of))]
+        self._out_bytes = hot["out_bytes"]
+        self._weight_bytes = hot["weight_bytes"]
+        self._new_in_bytes = hot["new_in_bytes"]
+        self._disc_bytes = hot["disc_bytes"]
+
+        # workload / accelerator constants
+        wl = cost_model.workload
+        self.n_layers = len(wl.layers)
+        self._layer_wb = [layer.weight_bytes for layer in wl.layers.values()]
+        layer_external = [not layer.inputs for layer in wl.layers.values()]
+        self._external_of = [layer_external[l] for l in self._layer_of]
+        self._w_cap = [c.weight_mem_bytes for c in acc.cores]
+        self._is_aimc = [c.core_type == "aimc" for c in acc.cores]
+        self._shared_l1 = acc.comm_style == "shared_mem"
+        if self._shared_l1:
+            self._act_cap0 = [0.0] * acc.n_cores
+            self._act_cap0[0] = float(sum(c.act_mem_bytes for c in acc.cores))
+        else:
+            self._act_cap0 = [float(c.act_mem_bytes) for c in acc.cores]
+
+    def evaluate(self, allocation: Sequence[int], priority: str = "latency",
+                 segment: bool = True, strict_layers: bool = False) -> tuple[float, float]:
+        """(latency_cc, energy_pj) of one allocation — the GA fitness fast
+        path: runs the timing model without trace recording."""
+        res = self.schedule(allocation, priority, segment=segment,
+                            strict_layers=strict_layers, record=False)
+        return (res.latency_cc, res.energy_pj)
+
+    def schedule(self, allocation: Sequence[int], priority: str = "latency",
+                 segment: bool = True, strict_layers: bool = False,
+                 record: bool = True) -> ScheduleResult:
+        """Run the event loop for one layer-core allocation.
+
+        `record=False` skips the observational traces (memory events, core/
+        comm/DRAM intervals) — the memory *accounting* still runs, since
+        overflow spills feed back into DRAM-port timing, so latency/energy
+        are identical; `peak_mem_bytes`/`act_peak_bytes` come back as NaN.
+        Use it for GA genome evaluations that only read latency/energy.
+        """
+        if priority not in ("latency", "memory"):
+            raise ValueError(f"unknown priority {priority!r}")
+        acc = self.accelerator
+        n = self.n
+        n_cores = acc.n_cores
+        alloc = np.asarray(allocation, dtype=np.int64)
+        alloc_l = alloc.tolist()
+        if strict_layers:
+            seg_of = self._layer_of          # seg id == layer id per CN
+        elif segment:
+            seg_of_layer = _segments_from_arrays(alloc_l, self._layer_wb, self._w_cap)
+            seg_of = seg_of_layer[self._layer_arr].tolist()
+        else:
+            seg_of = self._zeros_n           # single fused stack
+        core_of = alloc[self._layer_arr].tolist()
+        seg_barrier: dict[int, float] = {0: 0.0}
+        frontier = 0.0  # max finish time over everything scheduled so far
+
+        # local bindings for the hot loop
+        pred_pairs, succ_of = self._pred_pairs, self._succ_of
+        layer_of = self._layer_of
+        out_bytes, weight_bytes = self._out_bytes, self._weight_bytes
+        new_in_bytes, disc_bytes = self._new_in_bytes, self._disc_bytes
+        cost_rows = self._cost_rows
+        external_of = self._external_of
+        w_cap, is_aimc, shared_l1 = self._w_cap, self._is_aimc, self._shared_l1
+        heappush, heappop = heapq.heappush, heapq.heappop
+
+        core_free = [0.0] * n_cores
+        core_busy = [0.0] * n_cores
+        bus_free = 0.0
+        dram_free = 0.0
+        finish = [0.0] * n
+
+        act_cap = self._act_cap0
+        act_used = [0.0] * n_cores
+        resident: list[OrderedDict[int, int]] = [OrderedDict() for _ in range(n_cores)]
+        resident_used = [0.0] * n_cores
+
+        # fresh-byte bookkeeping: a producer CN's output is shipped to a given
+        # core at most once (consumers on that core share the landed data)
+        sent_to: dict[tuple[int, int], float] = {}  # (cn, core) -> arrival time
+        remaining_new: dict[int, int] = {}          # cn -> bytes left to ship
+        spilled: dict[int, float] = {}              # cn -> bytes pushed to DRAM
+
+        e_compute = e_sram = e_bus = e_dram = 0.0
+        # flat event buffers: (time, +/- bytes, core, kind-code)
+        ev_t: list[float] = []
+        ev_d: list[float] = []
+        ev_c: list[int] = []
+        ev_k: list[int] = []
+        core_intervals: list[list[tuple[float, float, int]]] = [[] for _ in range(n_cores)]
+        comm_intervals: list[tuple[float, float, int, int, int]] = []
+        dram_intervals: list[tuple[float, float, str, int]] = []
+        comm_max = 0.0
+        dram_max = 0.0
+
+        bus_bw = acc.bus_bw_bits_per_cc
+        dram_bw = acc.dram_bw_bits_per_cc
+        bus_e_bit = acc.bus_energy_pj_per_bit
+        dram_e_bit = acc.dram_energy_pj_per_bit
+
+        def dram_xfer(nbytes: float, kind: str, earliest: float = 0.0) -> float:
+            """Schedule an off-chip access node; returns completion time."""
+            nonlocal dram_free, e_dram, dram_max
+            if nbytes <= 0:
+                return earliest
+            start = dram_free if dram_free > earliest else earliest
+            dur = nbytes * 8.0 / dram_bw
+            end = start + dur
+            dram_free = end
+            e_dram += nbytes * 8.0 * dram_e_bit
+            if record:
+                dram_intervals.append((start, end, kind, int(nbytes)))
+            if end > dram_max:
+                dram_max = end
+            return end
+
+        # ---- candidate pool -------------------------------------------------
+        # heap key: (segment, priority key, layer, intra rank, cn) — fused
+        # stacks execute in order, so the segment id is the primary key. The
+        # 'latency' priority key (max finish over predecessors) is maintained
+        # incrementally by the successor loop instead of re-scanning preds.
+        indeg = self._indeg0.copy()
+        heap_code = self._heap_code
+        code_mask = self._code_mask
+        heap: list[tuple[int, float, int]] = []
+        by_memory = priority == "memory"
+        ready_key = [0.0] * n
+        have_spills = False
+
+        for i in range(n):
+            if indeg[i] == 0:
+                key = -float(layer_of[i]) if by_memory else 0.0
+                heappush(heap, (seg_of[i], key, heap_code[i]))
+
+        scheduled = 0
+        while heap:
+            i = heappop(heap)[2] & code_mask
+            core = core_of[i]
+            seg = seg_of[i]
+            if seg not in seg_barrier:
+                seg_barrier[seg] = frontier  # stack barrier: previous stack done
+            cost = cost_rows[i][core]
+            if cost is None:
+                raise ValueError(
+                    f"CN of layer {layer_of[i]} allocated to incompatible core {core}")
+            cyc, e_cn_comp, e_cn_sram = cost
+
+            # ---- incoming data: communication + spill readback --------------
+            data_ready = 0.0
+            for u, e_bytes in pred_pairs[i]:
+                if e_bytes == 0 or shared_l1 or (u_core := core_of[u]) == core:
+                    # same core, pure ordering edge, or shared-L1 architecture
+                    # (DIANA-style): both cores address one copy, no transfer
+                    fu = finish[u]
+                    if fu > data_ready:
+                        data_ready = fu
+                else:
+                    skey = (u, core)
+                    arrived = sent_to.get(skey)
+                    if arrived is not None:
+                        if arrived > data_ready:
+                            data_ready = arrived
+                    else:
+                        rem = remaining_new.get(u)
+                        if rem is None:
+                            rem = out_bytes[u]
+                        fresh = e_bytes if e_bytes < rem else rem
+                        remaining_new[u] = rem - fresh
+                        fu = finish[u]
+                        start = bus_free if bus_free > fu else fu
+                        dur = fresh * 8.0 / bus_bw
+                        end = start + dur
+                        bus_free = end
+                        e_bus += fresh * 8.0 * bus_e_bit
+                        if record:
+                            comm_intervals.append((start, end, u, i, int(fresh)))
+                        if end > comm_max:
+                            comm_max = end
+                        # consumer allocates at comm start; producer frees at
+                        # end (inlined; the comm path implies not shared_l1)
+                        if fresh > 0:
+                            cfree = act_cap[core] - act_used[core]
+                            clamped = cfree if cfree > 0.0 else 0.0
+                            kept = fresh if fresh <= clamped else clamped
+                            act_used[core] += kept
+                            if record:
+                                ev_t.append(start); ev_d.append(kept)
+                                ev_c.append(core); ev_k.append(_KIND_ACT)
+                            overflow = fresh - kept
+                            if overflow > 0:
+                                spilled[u] = spilled.get(u, 0.0) + overflow
+                                have_spills = True
+                                dram_xfer(overflow, "spill_w", start)
+                            used_u = act_used[u_core]
+                            rel = fresh if fresh <= used_u else used_u
+                            act_used[u_core] = used_u - rel
+                            if record:
+                                ev_t.append(end); ev_d.append(-rel)
+                                ev_c.append(u_core); ev_k.append(_KIND_ACT)
+                        sent_to[skey] = end
+                        if end > data_ready:
+                            data_ready = end
+                # spilled producer data must be read back through the DRAM port
+                if have_spills:
+                    sp = spilled.get(u)
+                    if sp:
+                        share = sp if sp < e_bytes else e_bytes
+                        done = dram_xfer(share, "spill_r", finish[u])
+                        if done > data_ready:
+                            data_ready = done
+
+            # ---- first-layer external inputs fetched via DRAM port ----------
+            # just-in-time prefetch: no earlier than needed for the core
+            # frontier, so inputs do not pile up on chip (staged fetch)
+            if external_of[i]:
+                nbytes = new_in_bytes[i]
+                dur = nbytes * 8.0 / dram_bw
+                earliest = core_free[core] - dur * PREFETCH_DEPTH
+                done = dram_xfer(nbytes, "input", earliest if earliest > 0.0 else 0.0)
+                if nbytes > 0:
+                    mcore = 0 if shared_l1 else core
+                    ifree = act_cap[mcore] - act_used[mcore]
+                    clamped = ifree if ifree > 0.0 else 0.0
+                    kept = nbytes if nbytes <= clamped else clamped
+                    act_used[mcore] += kept
+                    if record:
+                        ev_t.append(done); ev_d.append(kept)
+                        ev_c.append(mcore); ev_k.append(_KIND_ACT)
+                    overflow = nbytes - kept
+                    if overflow > 0:
+                        spilled[i] = spilled.get(i, 0.0) + overflow
+                        have_spills = True
+                        dram_xfer(overflow, "spill_w", done)
+                if done > data_ready:
+                    data_ready = done
+
+            # ---- weights: on-core residency with FIFO eviction --------------
+            # Oversized layers (weights > weight memory) stream double-buffered
+            # and occupy the full buffer while the core keeps processing that
+            # layer; the full fetch cost recurs only when residency is lost
+            # (interleaving with another weight-hungry layer = thrashing).
+            weight_ready = 0.0
+            wb = weight_bytes[i]
+            if wb > 0:
+                cap = w_cap[core]
+                hold = min(wb, cap) if cap > 0 else 0
+                res = resident[core]
+                lid = layer_of[i]
+                if lid not in res:
+                    evicted_bytes = 0
+                    while resident_used[core] + hold > cap and res:
+                        _, evicted = res.popitem(last=False)  # FIFO
+                        resident_used[core] -= evicted
+                        evicted_bytes += evicted
+                    res[lid] = hold
+                    resident_used[core] += hold
+                    kind = "weight" if wb <= cap else "weight_stream"
+                    weight_ready = dram_xfer(wb, kind, 0.0)
+                    # weights occupy on-chip SRAM (AiMC weights live in-array)
+                    if record and not is_aimc[core] and hold > 0:
+                        ev_t.append(weight_ready); ev_d.append(float(hold))
+                        ev_c.append(core); ev_k.append(_KIND_WEIGHT)
+                        if evicted_bytes:
+                            ev_t.append(weight_ready); ev_d.append(-float(evicted_bytes))
+                            ev_c.append(core); ev_k.append(_KIND_WEIGHT)
+
+            # ---- execute ----------------------------------------------------
+            start = core_free[core]
+            if data_ready > start:
+                start = data_ready
+            if weight_ready > start:
+                start = weight_ready
+            barrier = seg_barrier[seg]
+            if barrier > start:
+                start = barrier
+            end = start + cyc
+            core_free[core] = end
+            core_busy[core] += cyc
+            finish[i] = end
+            if end > frontier:
+                frontier = end
+            if record:
+                core_intervals[core].append((start, end, i))
+            e_compute += e_cn_comp
+            e_sram += e_cn_sram
+
+            # memory trace: outputs allocated at start, exclusive inputs freed
+            # at end (inlined alloc_act/free_act: the two always-taken sites)
+            nb = out_bytes[i]
+            if nb > 0:
+                mcore = 0 if shared_l1 else core
+                free = act_cap[mcore] - act_used[mcore]
+                clamped = free if free > 0.0 else 0.0
+                kept = nb if nb <= clamped else clamped
+                act_used[mcore] += kept
+                if record:
+                    ev_t.append(start); ev_d.append(kept)
+                    ev_c.append(mcore); ev_k.append(_KIND_ACT)
+                overflow = nb - kept
+                if overflow > 0:
+                    spilled[i] = spilled.get(i, 0.0) + overflow
+                    have_spills = True
+                    dram_xfer(overflow, "spill_w", start)
+            nb = disc_bytes[i]
+            if nb > 0:
+                mcore = 0 if shared_l1 else core
+                used = act_used[mcore]
+                rel = nb if nb <= used else used
+                act_used[mcore] = used - rel
+                if record:
+                    ev_t.append(end); ev_d.append(-rel)
+                    ev_c.append(mcore); ev_k.append(_KIND_ACT)
+
+            scheduled += 1
+            for v in succ_of[i]:
+                if end > ready_key[v]:
+                    ready_key[v] = end
+                d = indeg[v] - 1
+                indeg[v] = d
+                if d == 0:
+                    key = -float(layer_of[v]) if by_memory else ready_key[v]
+                    heappush(heap, (seg_of[v], key, heap_code[v]))
+
+        if scheduled != n:
+            raise RuntimeError(f"scheduled {scheduled}/{n} CNs: dependency cycle?")
+
+        latency = max(frontier if n else 0.0, comm_max, dram_max)
+        energy = {"compute": e_compute, "sram": e_sram, "bus": e_bus, "dram": e_dram}
+        total_e = e_compute + e_sram + e_bus + e_dram
+
+        # ---- Step 5.2: activation memory usage trace (vectorized) ----------
+        if record:
+            peak, act_peak = _peaks_from_buffers(ev_t, ev_d, ev_k)
+        else:
+            peak = act_peak = float("nan")
+
+        return ScheduleResult(
+            latency_cc=float(latency),
+            energy_pj=float(total_e),
+            energy_breakdown=energy,
+            peak_mem_bytes=peak,
+            act_peak_bytes=act_peak,
+            core_intervals=core_intervals,
+            comm_intervals=comm_intervals,
+            dram_intervals=dram_intervals,
+            core_busy=np.array(core_busy),
+            mem_buffers=(ev_t, ev_d, ev_c, ev_k),
+        )
+
+
+def _peaks_from_buffers(ev_t: list[float], ev_d: list[float],
+                        ev_k: list[int]) -> tuple[float, float]:
+    """Peak of the cumulative +/- byte trace, total and activations-only.
+
+    Equivalent to `memtrace.peak_memory` on the tuple list: stable sort by
+    time (ties keep insertion order) then a running float64 sum — np.cumsum
+    accumulates sequentially, so the partial sums match the Python loop
+    bit-for-bit.
+    """
+    if not ev_t:
+        return 0.0, 0.0
+    t = np.array(ev_t)
+    d = np.array(ev_d)
+    k = np.array(ev_k, dtype=np.int8)
+    order = np.argsort(t, kind="stable")
+    d_sorted = d[order]
+    run = np.cumsum(d_sorted)
+    peak = max(float(run.max()), 0.0)
+    act_d = d_sorted[k[order] == _KIND_ACT]
+    if act_d.size:
+        act_peak = max(float(np.cumsum(act_d).max()), 0.0)
+    else:
+        act_peak = 0.0
+    return peak, act_peak
+
+
+_ENGINES_PER_GRAPH = 8
+
+
+def get_engine(graph: CNGraph, cost_model: CostModel,
+               accelerator: Accelerator) -> ScheduleEngine:
+    """Engine for (graph, cost_model, accelerator), cached on the graph.
+
+    Keyed on content — the accelerator (hashable frozen dataclass), the cost
+    function, and the workload identity — so independently constructed but
+    equivalent CostModels (e.g. one per `evaluate_allocation` call) share one
+    precomputed engine instead of each paying the table build."""
+    cache = getattr(graph, "_engine_cache", None)
+    if cache is None:
+        cache = graph._engine_cache = {}
+    key = (accelerator, cost_model.cost_fn, id(cost_model.workload))
+    engine = cache.get(key)
+    if engine is None:
+        if len(cache) >= _ENGINES_PER_GRAPH:
+            cache.pop(next(iter(cache)))
+        # the engine holds a strong ref to cost_model (and its workload),
+        # pinning the workload id for the lifetime of the cache entry
+        engine = cache[key] = ScheduleEngine(graph, cost_model, accelerator)
+    return engine
 
 
 def schedule(
@@ -91,6 +588,23 @@ def schedule(
     segment: bool = True,             # fused-stack segmentation (see above)
     strict_layers: bool = False,      # traditional LBL: barrier after every layer
 ) -> ScheduleResult:
+    """Seed-compatible entry point: array-native engine, cached per graph."""
+    engine = get_engine(graph, cost_model, accelerator)
+    return engine.schedule(allocation, priority, segment=segment,
+                           strict_layers=strict_layers)
+
+
+def schedule_reference(
+    graph: CNGraph,
+    cost_model: CostModel,
+    allocation: Sequence[int],
+    accelerator: Accelerator,
+    priority: str = "latency",
+    segment: bool = True,
+    strict_layers: bool = False,
+) -> ScheduleResult:
+    """The seed object/dict implementation, kept as the golden oracle for
+    `ScheduleEngine` equivalence tests (identical semantics, ~10x slower)."""
     cns = graph.cns
     n = len(cns)
     alloc = np.asarray(allocation, dtype=np.int64)
@@ -110,7 +624,6 @@ def schedule(
     bus_free = 0.0
     dram_free = 0.0
     finish = np.zeros(n)
-    started = np.zeros(n, dtype=bool)
 
     # per-core memory state; shared-L1 architectures pool all activation
     # capacity into one space (index 0) that every core addresses
@@ -127,9 +640,9 @@ def schedule(
 
     # fresh-byte bookkeeping: a producer CN's output is shipped to a given core
     # at most once (consumers on that core share the landed data)
-    sent_to: dict[tuple[int, int], float] = {}      # (cn, core) -> arrival time
-    remaining_new: dict[tuple[int, int], int] = {}  # (cn, core) -> bytes left to ship
-    spilled: dict[int, float] = {}                  # cn -> bytes pushed to DRAM
+    sent_to: dict[tuple[int, int], float] = {}  # (cn, core) -> arrival time
+    remaining_new: dict[int, int] = {}          # cn -> bytes left to ship
+    spilled: dict[int, float] = {}              # cn -> bytes pushed to DRAM
 
     energy = {"compute": 0.0, "sram": 0.0, "bus": 0.0, "dram": 0.0}
     mem_events: list[tuple[float, float, int, str]] = []
@@ -178,11 +691,9 @@ def schedule(
 
     # ---- candidate pool -----------------------------------------------------
     indeg = np.array([len(p) for p in graph.preds], dtype=np.int64)
-    heap: list[tuple[float, int, int, int]] = []
-    counter = 0
+    heap: list[tuple[int, float, int, int, int]] = []
 
     def push(i: int) -> None:
-        nonlocal counter
         cn = cns[i]
         if priority == "latency":
             key = max((finish[u] for u in graph.preds[i]), default=0.0)
@@ -192,7 +703,6 @@ def schedule(
             raise ValueError(f"unknown priority {priority!r}")
         # fused stacks execute in order: segment id is the primary key
         heapq.heappush(heap, (int(seg_of[i]), key, cn.layer, cn.intra_rank, i))
-        counter += 1
 
     for i in range(n):
         if indeg[i] == 0:
@@ -213,7 +723,6 @@ def schedule(
 
         # ---- incoming data: communication + spill readback ----------------
         data_ready = 0.0
-        nonlocal_bus = 0.0
         for u in graph.preds[i]:
             e_bytes = graph.edge_bytes[(u, i)]
             u_core = int(core_of[u])
@@ -226,11 +735,11 @@ def schedule(
                 if key in sent_to:
                     data_ready = max(data_ready, sent_to[key])
                 else:
-                    rem = remaining_new.get((u, -1))
+                    rem = remaining_new.get(u)
                     if rem is None:
                         rem = cns[u].out_bytes
                     fresh = min(e_bytes, rem)
-                    remaining_new[(u, -1)] = rem - fresh
+                    remaining_new[u] = rem - fresh
                     start = max(bus_free, finish[u])
                     dur = fresh * 8.0 / bus_bw
                     bus_free = start + dur
@@ -241,7 +750,6 @@ def schedule(
                     free_act(u_core, fresh, start + dur)
                     sent_to[key] = start + dur
                     data_ready = max(data_ready, start + dur)
-                    nonlocal_bus = max(nonlocal_bus, start + dur)
             # spilled producer data must be read back through the DRAM port
             sp = spilled.get(u, 0.0)
             if sp > 0:
@@ -291,7 +799,6 @@ def schedule(
         core_busy[core] += cost.cycles
         finish[i] = end
         frontier = max(frontier, end)
-        started[i] = True
         core_intervals[core].append((start, end, i))
         energy["compute"] += cost.breakdown["compute"]
         energy["sram"] += (cost.breakdown["sram_act"] + cost.breakdown["sram_w"])
@@ -327,9 +834,9 @@ def schedule(
         energy_breakdown=dict(energy),
         peak_mem_bytes=peak,
         act_peak_bytes=act_peak,
-        mem_events=mem_events,
         core_intervals=core_intervals,
         comm_intervals=comm_intervals,
         dram_intervals=dram_intervals,
         core_busy=core_busy,
+        mem_events=mem_events,
     )

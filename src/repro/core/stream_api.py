@@ -19,9 +19,47 @@ from repro.core.cn import identify_cns
 from repro.core.costmodel import CostModel
 from repro.core.depgraph import CNGraph, build_cn_graph
 from repro.core.ga import GAResult, GeneticAllocator
-from repro.core.scheduler import ScheduleResult, schedule
+from repro.core.scheduler import ScheduleEngine, ScheduleResult, get_engine
 from repro.core.workload import Workload
 from repro.hw.accelerator import Accelerator
+
+
+def core_symmetry_cache_key(accelerator: Accelerator):
+    """Genome-memo canonicalizer exploiting identical-core symmetry.
+
+    On a homogeneous multi-core, relabeling the identical cores of an
+    allocation cannot change the schedule's latency/energy (cost tables,
+    bus and DRAM ports are label-invariant), so genomes equivalent under
+    such permutations share one GA cache entry. Cores are canonicalized to
+    their group's member ids in order of first appearance. Returns None when
+    every core is unique (no symmetry to exploit)."""
+    groups: dict = {}
+    for i, c in enumerate(accelerator.cores):
+        groups.setdefault(c, []).append(i)
+    sym = {i: tuple(members) for members in
+           (m for m in groups.values() if len(m) > 1) for i in members}
+    if not sym:
+        return None
+
+    def key(genome) -> bytes:
+        remap: dict[int, int] = {}
+        next_slot: dict[tuple, int] = {}
+        out = bytearray()
+        for g in genome:
+            g = int(g)
+            members = sym.get(g)
+            if members is not None:
+                m = remap.get(g)
+                if m is None:
+                    k = next_slot.get(members, 0)
+                    m = members[k]
+                    next_slot[members] = k + 1
+                    remap[g] = m
+                g = m
+            out.append(g)
+        return bytes(out)
+
+    return key
 
 
 def hw_min_tiles(accelerator: Accelerator) -> dict[str, int]:
@@ -61,10 +99,80 @@ class StreamResult:
         return self.schedule.peak_mem_bytes
 
 
+# ---------------------------------------------------------------------------
+# construction memoization: the CN graph depends only on (workload content,
+# granularity, HW minimum tiles) and the engine additionally on the
+# accelerator — both are pure builds, so repeated explorations (e.g. a sweep
+# of architectures over the same networks) reuse them instead of rebuilding.
+# Bounded FIFO caches; content keys make them safe under workload mutation.
+# ---------------------------------------------------------------------------
+_GRAPH_CACHE: dict[tuple, CNGraph] = {}
+_ENGINE_CACHE: dict[tuple, tuple[CNGraph, ScheduleEngine]] = {}
+_CACHE_LIMIT = 32
+
+
+def _granularity_key(granularity) -> tuple:
+    if isinstance(granularity, dict):
+        return ("per-layer", tuple(sorted(granularity.items())))
+    return ("uniform", granularity)
+
+
+def _effective_min_tile(granularity, min_tile: dict) -> tuple:
+    """Restrict `min_tile` to the components that can affect the CN split.
+
+    `resolve_splits` only consults `min_tile[d]` when the granularity asks
+    for more than one part along `d` and the tile is > 1, so e.g. an OX
+    unroll constraint is irrelevant to row-band granularities — dropping it
+    from the cache key lets architectures with different dataflows share one
+    CN graph when their splits provably coincide."""
+    if granularity == "layer":
+        return ()
+    if granularity == "line":
+        dims = ("OY",)
+    elif isinstance(granularity, tuple) and granularity[0] == "tile":
+        n_ox = int(granularity[2]) if len(granularity) > 2 else 1
+        dims = tuple(d for d, parts in (("OY", int(granularity[1])), ("OX", n_ox))
+                     if parts > 1)
+    else:  # per-layer dict or unknown: keep the full constraint
+        return tuple(sorted(min_tile.items()))
+    return tuple(sorted((d, v) for d, v in min_tile.items() if d in dims and v > 1))
+
+
+def _graph_key(workload: Workload, granularity, min_tile: dict) -> tuple:
+    return (workload.cache_key(), _granularity_key(granularity),
+            _effective_min_tile(granularity, min_tile))
+
+
+def _fifo_put(cache: dict, key, value) -> None:
+    if len(cache) >= _CACHE_LIMIT:
+        cache.pop(next(iter(cache)))
+    cache[key] = value
+
+
 def build_graph(workload: Workload, accelerator: Accelerator, granularity,
                 use_rtree: bool = True) -> CNGraph:
-    cns = identify_cns(workload, granularity, hw_min_tiles(accelerator))
-    return build_cn_graph(workload, cns, use_rtree=use_rtree)
+    min_tile = hw_min_tiles(accelerator)
+    key = (_graph_key(workload, granularity, min_tile), use_rtree)
+    graph = _GRAPH_CACHE.get(key)
+    if graph is None:
+        cns = identify_cns(workload, granularity, min_tile)
+        graph = build_cn_graph(workload, cns, use_rtree=use_rtree)
+        _fifo_put(_GRAPH_CACHE, key, graph)
+    return graph
+
+
+def _cached_engine(workload: Workload, accelerator: Accelerator,
+                   granularity) -> ScheduleEngine:
+    min_tile = hw_min_tiles(accelerator)
+    gkey = (_graph_key(workload, granularity, min_tile), True)
+    key = (gkey, accelerator)
+    graph = build_graph(workload, accelerator, granularity)
+    hit = _ENGINE_CACHE.get(key)
+    if hit is not None and hit[0] is graph:
+        return hit[1]
+    engine = get_engine(graph, CostModel(workload, accelerator), accelerator)
+    _fifo_put(_ENGINE_CACHE, key, (graph, engine))
+    return engine
 
 
 def evaluate_allocation(
@@ -74,13 +182,20 @@ def evaluate_allocation(
     granularity="line",
     priority: str = "latency",
     graph: CNGraph | None = None,
+    engine: ScheduleEngine | None = None,
 ) -> ScheduleResult:
-    """Schedule a fixed layer-core allocation (used by validation benches)."""
-    graph = graph or build_graph(workload, accelerator, granularity)
-    cm = CostModel(workload, accelerator)
+    """Schedule a fixed layer-core allocation (used by validation benches).
+
+    Pass `engine` (from a previous call or `ScheduleEngine(...)`) to reuse the
+    precomputed CSR graph + cost tables across many allocations."""
+    if engine is None:
+        if graph is not None:
+            engine = get_engine(graph, CostModel(workload, accelerator), accelerator)
+        else:
+            engine = _cached_engine(workload, accelerator, granularity)
     # 'layer' granularity == traditional layer-by-layer: strictly sequential
-    return schedule(graph, cm, np.asarray(allocation), accelerator, priority,
-                    strict_layers=(granularity == "layer"))
+    return engine.schedule(np.asarray(allocation), priority,
+                           strict_layers=(granularity == "layer"))
 
 
 def explore(
@@ -95,16 +210,19 @@ def explore(
     initial_allocations=(),
 ) -> StreamResult:
     t0 = time.perf_counter()
-    graph = build_graph(workload, accelerator, granularity)
-    cm = CostModel(workload, accelerator)
+    # one precomputed engine (CSR graph + dense cost tables) shared by every
+    # GA genome evaluation of this exploration — and, via the content-keyed
+    # caches, by later explorations of the same (workload, granularity, arch)
+    engine = _cached_engine(workload, accelerator, granularity)
+    graph = engine.graph
     feas = feasible_cores_per_layer(workload, accelerator)
 
     strict = granularity == "layer"  # traditional LBL: no cross-layer overlap
 
     def evaluate(genome: np.ndarray) -> tuple[float, float]:
-        res = schedule(graph, cm, genome, accelerator, priority,
-                       strict_layers=strict)
-        return (res.latency_cc, res.energy_pj)
+        # fitness only needs latency/energy: run the timing model without
+        # the observational memory/interval traces (identical results)
+        return engine.evaluate(genome, priority, strict_layers=strict)
 
     scalarize = {
         "edp": lambda o: float(o[0] * o[1]),
@@ -119,13 +237,12 @@ def explore(
         ga = GeneticAllocator(
             n_genes=len(workload), feasible_cores=feas, evaluate=evaluate,
             pop_size=pop_size, generations=generations, scalarize=scalarize,
-            seed=seed,
+            seed=seed, cache_key=core_symmetry_cache_key(accelerator),
         )
         ga_res = ga.run(initial=initial_allocations)
         alloc = ga_res.best_genome
 
-    final = schedule(graph, cm, alloc, accelerator, priority,
-                     strict_layers=(granularity == "layer"))
+    final = engine.schedule(alloc, priority, strict_layers=strict)
     return StreamResult(
         schedule=final, allocation=alloc, ga=ga_res, graph=graph,
         runtime_s=time.perf_counter() - t0, granularity=granularity,

@@ -141,6 +141,15 @@ class Workload:
     def edges(self) -> list[tuple[int, int]]:
         return [(p, c) for c, l in self.layers.items() for p in l.inputs]
 
+    def cache_key(self) -> tuple:
+        """Content-based hashable identity (layers are mutable-by-append, so
+        the key reflects the current DAG). Used to memoize CN-graph builds
+        across repeated explorations of structurally identical workloads."""
+        return (self.name, tuple(
+            (l.id, l.op, tuple(sorted(l.dims.items())), l.stride, l.padding,
+             tuple(l.inputs), l.bits)
+            for l in self.layers.values()))
+
     @property
     def total_macs(self) -> int:
         return sum(l.macs for l in self.layers.values())

@@ -20,9 +20,20 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ModuleNotFoundError:  # optional dep: fail at use, not import
+    zstandard = None
 
 _FLUSH_GROUP_BYTES = 64 << 20
+
+
+def _require_zstandard():
+    if zstandard is None:
+        raise ModuleNotFoundError(
+            "checkpoint save/restore needs the optional 'zstandard' package "
+            "(pip install stream-repro[checkpoint])")
 
 
 def _flatten_with_paths(tree):
@@ -32,6 +43,7 @@ def _flatten_with_paths(tree):
 
 def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True) -> str:
     """Serialize a pytree of arrays; returns the checkpoint path."""
+    _require_zstandard()
     flat, _ = _flatten_with_paths(tree)
 
     def to_host(leaf):
@@ -110,6 +122,7 @@ def latest_step(ckpt_dir: str) -> int | None:
 
 def restore(ckpt_dir: str, step: int, like_tree=None, shardings=None):
     """Load a checkpoint; optionally re-shard onto `shardings` (any mesh)."""
+    _require_zstandard()
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

@@ -3,7 +3,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cn import cns_by_layer, identify_cns
 from repro.core.depgraph import build_cn_graph

@@ -1,9 +1,9 @@
 """R-tree (Stream Step 2 substrate): property tests vs brute force."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.rtree import RTree, brute_force_query
+from _hypothesis_compat import given, settings, st
+from repro.core.rtree import RTree, brute_force_query, brute_force_query_batch
 
 
 def _random_boxes(rng, n, d, span=100, max_ext=10):
@@ -23,6 +23,25 @@ def test_rtree_matches_bruteforce(n, d, seed):
         got = np.sort(tree.query(q))
         want = np.sort(brute_force_query(boxes, q))
         np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(1, 300), st.integers(1, 4), st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_query_batch_matches_per_box_queries(n, d, seed):
+    """Bulk query == per-box loop: same pairs, same per-query order."""
+    rng = np.random.default_rng(seed)
+    boxes = _random_boxes(rng, n, d)
+    tree = RTree(boxes, fanout=8)
+    queries = _random_boxes(rng, 7, d, max_ext=20)
+    qi, ids = tree.query_batch(queries)
+    assert np.all(np.diff(qi) >= 0)  # grouped by query, ascending
+    for k, q in enumerate(queries):
+        np.testing.assert_array_equal(ids[qi == k], tree.query(q))
+    # brute-force batch agrees as a set of pairs
+    bq, bi = brute_force_query_batch(boxes, queries)
+    got = {(int(a), int(b)) for a, b in zip(qi, ids)}
+    want = {(int(a), int(b)) for a, b in zip(bq, bi)}
+    assert got == want
 
 
 def test_rtree_empty_query():

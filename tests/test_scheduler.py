@@ -1,7 +1,8 @@
 """Stream Step 5 scheduler invariants + GA (Step 4) behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.paper_workloads import resnet18, squeezenet
 from repro.core import CostModel, build_graph, evaluate_allocation, explore
