@@ -1,0 +1,18 @@
+PY := PYTHONPATH=src python
+
+.PHONY: test tier1 bench bench-full
+
+# full suite (includes the jax model/train/serve substrate)
+test:
+	$(PY) -m pytest -q
+
+# fast core Stream suite: engine golden equivalence, CN dependency graph,
+# scheduler invariants, exploration session + archspec (~seconds, no jax)
+tier1:
+	$(PY) -m pytest -q -m tier1
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-full:
+	$(PY) -m benchmarks.run --full

@@ -1,10 +1,13 @@
-"""Paper Figs. 13-15: EDP/latency/energy exploration.
+"""Paper Figs. 13-15: EDP/latency/energy exploration, sweep-native.
 
 5 DNNs x 7 iso-area architectures, layer-by-layer vs fine-grained layer-fused
 scheduling, GA-based allocation optimizing EDP, latency-prioritized schedule.
-Reports per-cell EDP and the geomean EDP reduction per architecture (the
-paper's headline: 2.4-4.7x single-core, 10-19x homogeneous multi-core, ~30x
-heterogeneous).
+The whole grid is declared as one `DesignSpace` and executed through an
+`ExplorationSession` (pass ``workers=N`` for the multi-process executor —
+per-point metrics are bit-identical to the serial path).  Reports per-cell
+EDP, the geomean EDP reduction per architecture (the paper's headline:
+2.4-4.7x single-core, 10-19x homogeneous multi-core, ~30x heterogeneous),
+and sweep throughput in points/sec.
 
 Quick mode uses a reduced GA budget and 32-band CN granularity; --full uses
 line granularity and a larger GA budget.
@@ -15,38 +18,52 @@ import time
 
 import numpy as np
 
+from repro.api import DesignSpace, ExplorationSession, GAConfig, \
+    granularity_label
 from repro.configs.paper_workloads import EXPLORATION_WORKLOADS
-from repro.core import explore
 from repro.hw.catalog import EXPLORATION_ARCHITECTURES
 
 FINE_GRANULARITY = ("tile", 32, 1)   # 32 row-bands per layer ("fine-grained")
 
 
-def run(report=print, full: bool = False, seed: int = 0) -> dict:
+def run(report=print, full: bool = False, seed: int = 0,
+        workers: int = 0, cache_dir: str | None = None) -> dict:
     pop, gens = (24, 16) if full else (10, 6)
     fine = "line" if full else FINE_GRANULARITY
-    results: dict[tuple, dict] = {}
+    space = DesignSpace(
+        workloads=EXPLORATION_WORKLOADS,
+        archs=EXPLORATION_ARCHITECTURES,
+        granularities=["layer", fine],
+        ga=GAConfig(pop_size=pop, generations=gens, seed=seed),
+    )
+    session = ExplorationSession(cache_dir=cache_dir)
     report("== Figs. 13-15: layer-by-layer vs layer-fused EDP exploration ==")
+    report(f"design space: {space!r}; executor: "
+           + (f"process x{workers}" if workers else "serial"))
+    t00 = time.perf_counter()
+    sweep = session.run(space, executor="process" if workers else "serial",
+                        max_workers=workers or None)
+    wall = time.perf_counter() - t00
+
+    by_cell = {(r.arch, r.workload, r.granularity): r for r in sweep.records}
+    fine_label = granularity_label(fine)
+
+    results: dict[tuple, dict] = {}
     report(f"{'arch':10s} {'network':12s} {'EDP(lbl)':>11s} {'EDP(fused)':>11s} "
            f"{'gain':>6s} {'lat(lbl)':>10s} {'lat(fus)':>10s} {'E(lbl)uJ':>9s} {'E(fus)uJ':>9s}")
-    t00 = time.perf_counter()
-    for arch_name, arch_fn in EXPLORATION_ARCHITECTURES.items():
+    for arch_name in EXPLORATION_ARCHITECTURES:
         gains = []
-        for wl_name, wl_fn in EXPLORATION_WORKLOADS.items():
-            acc = arch_fn()
-            w = wl_fn()
-            r_lbl = explore(w, acc, granularity="layer", objective="edp",
-                            pop_size=pop, generations=gens, seed=seed)
-            r_fus = explore(w, acc, granularity=fine, objective="edp",
-                            pop_size=pop, generations=gens, seed=seed)
+        for wl_name in EXPLORATION_WORKLOADS:
+            r_lbl = by_cell[(arch_name, wl_name, "layer")]
+            r_fus = by_cell[(arch_name, wl_name, fine_label)]
             gain = r_lbl.edp / max(r_fus.edp, 1e-30)
             gains.append(gain)
             results[(arch_name, wl_name)] = dict(
                 edp_lbl=r_lbl.edp, edp_fused=r_fus.edp, gain=gain,
                 lat_lbl=r_lbl.latency_cc, lat_fused=r_fus.latency_cc,
                 e_lbl=r_lbl.energy_pj, e_fused=r_fus.energy_pj,
-                dram_lbl=r_lbl.schedule.energy_breakdown["dram"],
-                dram_fused=r_fus.schedule.energy_breakdown["dram"],
+                dram_lbl=r_lbl.energy_breakdown["dram"],
+                dram_fused=r_fus.energy_breakdown["dram"],
             )
             report(f"{arch_name:10s} {wl_name:12s} {r_lbl.edp:11.3e} {r_fus.edp:11.3e} "
                    f"{gain:5.1f}x {r_lbl.latency_cc:10.3e} {r_fus.latency_cc:10.3e} "
@@ -54,7 +71,15 @@ def run(report=print, full: bool = False, seed: int = 0) -> dict:
         geo = float(np.exp(np.mean(np.log(gains))))
         results[(arch_name, "geomean")] = dict(gain=geo)
         report(f"{arch_name:10s} {'geomean':12s} {'':11s} {'':11s} {geo:5.1f}x")
-    report(f"total exploration time: {time.perf_counter() - t00:.1f}s")
+
+    points_per_sec = len(sweep) / max(wall, 1e-9)
+    results[("sweep", "stats")] = dict(
+        points=len(sweep), scheduled=sweep.n_scheduled,
+        from_store=sweep.n_from_store, wall_s=wall,
+        points_per_sec=points_per_sec)
+    report(f"total exploration time: {wall:.1f}s "
+           f"({len(sweep)} points, {points_per_sec:.2f} points/s, "
+           f"{sweep.n_from_store} served from store)")
 
     # paper's structural claims (quick-mode tolerant):
     sc = [results[(a, "geomean")]["gain"] for a in ("SC:TPU", "SC:Eye", "SC:Env")]

@@ -1,27 +1,35 @@
 """Paper Fig. 4 / Sec. V summary: CN granularity co-exploration.
 
 Sweeps scheduling granularities for ResNet-18 on MC:Hetero, showing the
-latency / memory / EDP trade-off as CNs get finer and the automatic pick."""
+latency / memory / EDP trade-off as CNs get finer and the automatic pick.
+Uses `ExplorationSession.explore_granularity`, whose typed
+`GranularitySweep` keeps the winner out of the results mapping."""
 from __future__ import annotations
 
+from repro.api import ExplorationSession
 from repro.configs.paper_workloads import resnet18
-from repro.core.stream_api import explore_granularity
 from repro.hw.catalog import mc_hetero
 
 
 def run(report=print):
-    res = explore_granularity(resnet18(), mc_hetero(), pop_size=8,
-                              generations=5)
-    best = res.pop("best")
+    session = ExplorationSession()
+    sweep = session.explore_granularity(resnet18(), mc_hetero(), pop_size=8,
+                                        generations=5)
     report("== Fig. 4: scheduling-granularity co-exploration (ResNet-18, MC:Hetero) ==")
     report(f"{'granularity':12s} {'#CNs':>6s} {'latency(cc)':>12s} "
            f"{'energy(uJ)':>11s} {'EDP':>11s} {'act peak(KB)':>13s}")
-    for k, r in res.items():
-        report(f"{k:12s} {len(r.graph.cns):6d} {r.latency_cc:12.3e} "
+    for label, r in sweep.items():
+        report(f"{label:12s} {len(r.graph.cns):6d} {r.latency_cc:12.3e} "
                f"{r.energy_pj / 1e6:11.1f} {r.edp:11.3e} "
                f"{r.schedule.act_peak_bytes / 1024:13.1f}")
-    report(f"objective-best granularity: {best}")
-    return res
+    report(f"objective-best granularity: {sweep.best_label}")
+    return {"best": sweep.best_label,
+            "per_granularity": {
+                label: dict(latency_cc=r.latency_cc, energy_pj=r.energy_pj,
+                            edp=r.edp,
+                            act_peak_bytes=r.schedule.act_peak_bytes,
+                            n_cns=len(r.graph.cns))
+                for label, r in sweep.items()}}
 
 
 if __name__ == "__main__":

@@ -50,7 +50,8 @@ BENCHES = [
     ("granularity", "granularity co-exploration (paper Fig. 4)",
      "benchmarks.bench_granularity", lambda a: {}),
     ("exploration", "exploration (paper Figs. 13-15)",
-     "benchmarks.bench_exploration", lambda a: {"full": a.full}),
+     "benchmarks.bench_exploration",
+     lambda a: {"full": a.full, "workers": a.workers}),
     ("kernels", "kernels (Pallas blocks)",
      "benchmarks.bench_kernels", lambda a: {}),
     ("pipeline_plan", "pipeline planner (beyond-paper)",
@@ -66,6 +67,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="exploration sweep: process-executor worker count "
+                         "(0 = in-process serial)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing BENCH_<slug>.json files")
     args = ap.parse_args()

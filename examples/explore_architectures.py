@@ -1,27 +1,48 @@
 """Architecture exploration (paper Sec. V in miniature): two DNNs across the
-seven iso-area accelerators, layer-by-layer vs layer-fused, EDP-optimized.
+seven iso-area accelerators, layer-by-layer vs layer-fused, EDP-optimized —
+declared as one `DesignSpace` and executed by an `ExplorationSession`.
 
-  PYTHONPATH=src python examples/explore_architectures.py
+Pass a directory as the first argument to persist results: a second run
+against the same store schedules zero new points.
+
+  PYTHONPATH=src python examples/explore_architectures.py [store_dir]
 """
+import sys
+
 import numpy as np
 
-from repro.configs.paper_workloads import EXPLORATION_WORKLOADS
-from repro.core import explore
+from repro.api import DesignSpace, ExplorationSession, GAConfig
 from repro.hw.catalog import EXPLORATION_ARCHITECTURES
 
-nets = {k: EXPLORATION_WORKLOADS[k] for k in ("resnet18", "squeezenet")}
+space = DesignSpace(
+    workloads=["resnet18", "squeezenet"],      # names from the paper registry
+    archs=EXPLORATION_ARCHITECTURES,
+    granularities=["layer", ("tile", 32, 1)],
+    ga=GAConfig(pop_size=8, generations=5),
+)
+session = ExplorationSession(cache_dir=sys.argv[1] if len(sys.argv) > 1 else None)
+sweep = session.run(space)
+print(f"{len(sweep)} points: {sweep.n_scheduled} scheduled, "
+      f"{sweep.n_from_store} from store, {sweep.wall_s:.1f}s\n")
+
+by_cell = {(r.arch, r.workload, r.granularity): r for r in sweep.records}
 print(f"{'architecture':12s} {'network':12s} {'EDP(lbl)':>11s} "
       f"{'EDP(fused)':>11s} {'gain':>6s}")
-for arch_name, arch_fn in EXPLORATION_ARCHITECTURES.items():
+for arch_name in EXPLORATION_ARCHITECTURES:
     gains = []
-    for net_name, net_fn in nets.items():
-        acc, w = arch_fn(), net_fn()
-        lbl = explore(w, acc, granularity="layer", pop_size=8, generations=5)
-        fused = explore(w, acc, granularity=("tile", 32, 1), pop_size=8,
-                        generations=5)
+    for net_name in space.workloads:
+        lbl = by_cell[(arch_name, net_name, "layer")]
+        fused = by_cell[(arch_name, net_name, "tile32x1")]
         gain = lbl.edp / fused.edp
         gains.append(gain)
         print(f"{arch_name:12s} {net_name:12s} {lbl.edp:11.3e} "
               f"{fused.edp:11.3e} {gain:5.1f}x")
     print(f"{arch_name:12s} {'geomean':12s} {'':23s} "
           f"{np.exp(np.mean(np.log(gains))):5.1f}x")
+
+best = sweep.best("edp")
+print(f"\nbest EDP point: {best.arch} / {best.workload} / {best.granularity} "
+      f"(EDP {best.edp:.3e})")
+front = sweep.pareto(("latency_cc", "energy_pj"))
+print(f"latency/energy pareto front: "
+      + ", ".join(f"{r.arch}/{r.workload}/{r.granularity}" for r in front))

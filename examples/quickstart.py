@@ -1,13 +1,15 @@
 """Quickstart: Stream design-space exploration in ~20 lines.
 
-Explores ResNet-18 on the heterogeneous quad-core accelerator, comparing
-traditional layer-by-layer scheduling against fine-grained layer fusion
-(the paper's central experiment), then prints the best schedule's stats.
+Explores ResNet-18 on the heterogeneous quad-core accelerator through an
+`ExplorationSession`, comparing traditional layer-by-layer scheduling
+against fine-grained layer fusion (the paper's central experiment), then
+prints the best schedule's stats.  (`repro.core.explore` remains as a
+one-call wrapper over a default session.)
 
   PYTHONPATH=src python examples/quickstart.py
 """
+from repro.api import ExplorationSession
 from repro.configs.paper_workloads import resnet18
-from repro.core import explore
 from repro.hw.catalog import mc_hetero
 
 workload = resnet18()
@@ -15,10 +17,11 @@ accelerator = mc_hetero()
 print(f"workload: {workload}")
 print(f"accelerator: {accelerator.name} ({accelerator.n_cores} cores)")
 
-lbl = explore(workload, accelerator, granularity="layer",
-              objective="edp", pop_size=10, generations=6)
-fused = explore(workload, accelerator, granularity=("tile", 32, 1),
-                objective="edp", pop_size=10, generations=6)
+session = ExplorationSession()   # owns the graph/engine caches
+lbl = session.explore(workload, accelerator, granularity="layer",
+                      objective="edp", pop_size=10, generations=6)
+fused = session.explore(workload, accelerator, granularity=("tile", 32, 1),
+                        objective="edp", pop_size=10, generations=6)
 
 for name, r in (("layer-by-layer", lbl), ("layer-fused", fused)):
     print(f"\n{name}:")

@@ -1,0 +1,26 @@
+"""Sweep-native exploration API: declarative specs, spaces, and sessions.
+
+    from repro.api import ArchSpec, DesignSpace, ExplorationSession
+
+`ArchSpec` declares hardware as data, `DesignSpace` declares the sweep as a
+constrained cross-product, and `ExplorationSession` executes it (serial or
+multi-process) against a persistent content-keyed result store.  The legacy
+one-call API (`repro.core.explore`) is a thin wrapper over a default session.
+"""
+from repro.api.archspec import ArchSpec, CoreSpec, as_arch_spec, catalog_specs
+from repro.api.designspace import DesignPoint, DesignSpace, GAConfig, \
+    fits_weights_on_chip, granularity_label, max_cores, min_act_mem
+from repro.api.session import (DEFAULT_GRANULARITIES, ExplorationRecord,
+                               ExplorationSession, FifoCache,
+                               GranularitySweep, ResultStore, SweepResult,
+                               best_record, default_session, pareto_records,
+                               pivot_records)
+
+__all__ = [
+    "ArchSpec", "CoreSpec", "as_arch_spec", "catalog_specs",
+    "DesignPoint", "DesignSpace", "GAConfig", "granularity_label",
+    "min_act_mem", "max_cores", "fits_weights_on_chip",
+    "ExplorationSession", "ExplorationRecord", "SweepResult",
+    "GranularitySweep", "ResultStore", "FifoCache", "DEFAULT_GRANULARITIES",
+    "best_record", "pareto_records", "pivot_records", "default_session",
+]

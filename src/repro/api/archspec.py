@@ -1,0 +1,205 @@
+"""Declarative accelerator specifications.
+
+`ArchSpec` is the sweep-native counterpart of `repro.hw.Accelerator`: a
+JSON-serializable, content-hashable description of an accelerator that
+materializes to the simulation object on demand.  Because the spec is pure
+data it can cross process boundaries (parallel sweep workers rebuild their
+engines from it), key a persistent result store, and be generated in bulk
+by `ArchSpec.grid(...)` without constructing a single `CoreModel`.
+
+Round-trips are exact for everything in `repro.hw.catalog`:
+
+    spec = ArchSpec.from_accelerator(mc_hetero())
+    assert spec.to_accelerator() == mc_hetero()
+    assert ArchSpec.from_json(spec.to_json()) == spec
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+from typing import Iterable, Mapping, Sequence
+
+from repro.hw.accelerator import Accelerator
+from repro.hw.core_model import CoreModel, DRAM_ENERGY_PJ_PER_BIT
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreSpec:
+    """Declarative single-core description; mirrors `CoreModel` field-for-field."""
+
+    name: str
+    dataflow: tuple[tuple[str, int], ...]
+    act_mem_bytes: int
+    weight_mem_bytes: int
+    mac_energy_pj: float = 0.5
+    sram_bw_bits_per_cc: float = 512
+    core_type: str = "digital"
+    aimc_cc_per_op: float = 1.0
+    latency_overhead: float = 1.0
+    act_energy_override: float | None = None
+    weight_energy_override: float | None = None
+
+    @classmethod
+    def from_core(cls, core: CoreModel) -> "CoreSpec":
+        return cls(**{f.name: getattr(core, f.name)
+                      for f in dataclasses.fields(CoreModel)})
+
+    def to_core(self) -> CoreModel:
+        return CoreModel(**dataclasses.asdict(self))
+
+    def with_(self, **overrides) -> "CoreSpec":
+        return dataclasses.replace(self, **overrides)
+
+
+def _normalize_core(data: Mapping) -> CoreSpec:
+    data = dict(data)
+    data["dataflow"] = tuple((str(d), int(u)) for d, u in data["dataflow"])
+    return CoreSpec(**data)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    """Declarative accelerator: cores + interconnect, as pure data."""
+
+    name: str
+    cores: tuple[CoreSpec, ...]
+    bus_bw_bits_per_cc: float = 128.0
+    bus_energy_pj_per_bit: float = 0.08
+    dram_bw_bits_per_cc: float = 64.0
+    dram_energy_pj_per_bit: float = DRAM_ENERGY_PJ_PER_BIT
+    comm_style: str = "bus"
+
+    # ---- materialization -------------------------------------------------
+    @classmethod
+    def from_accelerator(cls, acc: Accelerator) -> "ArchSpec":
+        return cls(
+            name=acc.name,
+            cores=tuple(CoreSpec.from_core(c) for c in acc.cores),
+            bus_bw_bits_per_cc=acc.bus_bw_bits_per_cc,
+            bus_energy_pj_per_bit=acc.bus_energy_pj_per_bit,
+            dram_bw_bits_per_cc=acc.dram_bw_bits_per_cc,
+            dram_energy_pj_per_bit=acc.dram_energy_pj_per_bit,
+            comm_style=acc.comm_style,
+        )
+
+    def to_accelerator(self) -> Accelerator:
+        return Accelerator(
+            name=self.name,
+            cores=tuple(c.to_core() for c in self.cores),
+            bus_bw_bits_per_cc=self.bus_bw_bits_per_cc,
+            bus_energy_pj_per_bit=self.bus_energy_pj_per_bit,
+            dram_bw_bits_per_cc=self.dram_bw_bits_per_cc,
+            dram_energy_pj_per_bit=self.dram_energy_pj_per_bit,
+            comm_style=self.comm_style,
+        )
+
+    # ---- serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "ArchSpec":
+        data = dict(data)
+        data["cores"] = tuple(_normalize_core(c) for c in data["cores"])
+        return cls(**data)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ArchSpec":
+        return cls.from_dict(json.loads(text))
+
+    def content_key(self) -> str:
+        """Stable hex digest of the spec content, name included: the name
+        participates in `Accelerator` equality (and thus in engine cache
+        keys), so renamed aliases are deliberately distinct content and do
+        not share store entries."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
+
+    # ---- convenience -----------------------------------------------------
+    @property
+    def n_cores(self) -> int:
+        return len(self.cores)
+
+    def compute_cores(self) -> tuple[CoreSpec, ...]:
+        return tuple(c for c in self.cores if c.core_type != "simd")
+
+    def total_act_mem_bytes(self) -> int:
+        return sum(c.act_mem_bytes for c in self.cores)
+
+    def with_(self, **overrides) -> "ArchSpec":
+        return dataclasses.replace(self, **overrides)
+
+    # ---- grid construction ----------------------------------------------
+    @classmethod
+    def grid(
+        cls,
+        template: "CoreSpec | CoreModel",
+        *,
+        cores: Sequence[int] = (4,),
+        act_mem_bytes: Sequence[int] | None = None,
+        weight_mem_bytes: Sequence[int] | None = None,
+        bus_bw_bits_per_cc: Sequence[float] = (128.0,),
+        dram_bw_bits_per_cc: Sequence[float] = (64.0,),
+        comm_style: Sequence[str] = ("bus",),
+        simd: "CoreSpec | CoreModel | None" = None,
+        name_fmt: str | None = None,
+    ) -> list["ArchSpec"]:
+        """Cross-product of homogeneous multi-core variants of `template`.
+
+        Each grid point replicates the template core `n` times (names suffixed
+        `0..n-1`), optionally overriding the per-core activation/weight memory,
+        and appends the shared `simd` helper core if given.  The axes are the
+        architecture knobs of the paper's iso-area study (core count, SRAM
+        split, bus/DRAM bandwidth, interconnect style).  Unless `name_fmt`
+        overrides it, every swept axis appears in the generated names, so
+        no two grid points collide (a collision would make them collapse
+        into one `DesignSpace` entry)."""
+        if isinstance(template, CoreModel):
+            template = CoreSpec.from_core(template)
+        if isinstance(simd, CoreModel):
+            simd = CoreSpec.from_core(simd)
+        act_axis = tuple(act_mem_bytes) if act_mem_bytes is not None \
+            else (template.act_mem_bytes,)
+        w_axis = tuple(weight_mem_bytes) if weight_mem_bytes is not None \
+            else (template.weight_mem_bytes,)
+        if name_fmt is None:
+            # :g keeps sub-KiB memory sizes distinct (0.5 vs 0.75), so no
+            # two grid points can share a name
+            name_fmt = "{template}x{n}-a{act_kb:g}w{w_kb:g}" \
+                + ("-bus{bus:g}" if len(tuple(bus_bw_bits_per_cc)) > 1 else "") \
+                + ("-dram{dram:g}" if len(tuple(dram_bw_bits_per_cc)) > 1 else "") \
+                + ("-{comm}" if len(tuple(comm_style)) > 1 else "")
+        out = []
+        for n, act, wmem, bus, dram, comm in itertools.product(
+                cores, act_axis, w_axis, bus_bw_bits_per_cc,
+                dram_bw_bits_per_cc, comm_style):
+            core = template.with_(act_mem_bytes=act, weight_mem_bytes=wmem)
+            members = tuple(core.with_(name=f"{template.name}{i}")
+                            for i in range(n))
+            if simd is not None:
+                members += (simd,)
+            name = name_fmt.format(template=template.name, n=n,
+                                   act_kb=act / 1024, w_kb=wmem / 1024,
+                                   bus=bus, dram=dram, comm=comm)
+            out.append(cls(name=name, cores=members, bus_bw_bits_per_cc=bus,
+                           dram_bw_bits_per_cc=dram, comm_style=comm))
+        return out
+
+
+def as_arch_spec(arch: "ArchSpec | Accelerator") -> ArchSpec:
+    """Accept either representation at API boundaries."""
+    if isinstance(arch, ArchSpec):
+        return arch
+    return ArchSpec.from_accelerator(arch)
+
+
+def catalog_specs(which: Iterable[str] | None = None) -> dict[str, ArchSpec]:
+    """The `repro.hw.catalog` exploration + validation architectures as specs."""
+    from repro.hw.catalog import EXPLORATION_ARCHITECTURES, VALIDATION_ARCHITECTURES
+    registry = {**EXPLORATION_ARCHITECTURES, **VALIDATION_ARCHITECTURES}
+    names = list(which) if which is not None else list(registry)
+    return {n: ArchSpec.from_accelerator(registry[n]()) for n in names}

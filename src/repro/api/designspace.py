@@ -1,0 +1,227 @@
+"""Declarative design spaces: the sweep as a first-class object.
+
+A `DesignSpace` declares the cross-product
+
+    workloads x architectures x granularities x (objective, priority)
+
+plus a GA budget and constraint predicates.  Constraints are evaluated on
+the *specs* while enumerating points — before any CN graph is built or a
+single schedule is run — so infeasible corners of a large grid cost nothing.
+
+Each enumerated `DesignPoint` is pure data (picklable, JSON-serializable)
+and carries a content key combining the workload DAG content, the
+architecture spec, the granularity, and the full optimization setup; the
+key is what makes sweep results reusable across runs and processes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Callable, Iterable, Iterator, Mapping, Sequence
+
+from repro.api.archspec import ArchSpec, as_arch_spec
+from repro.core.workload import Workload
+
+def granularity_label(granularity) -> str:
+    """Canonical short label ('layer', 'line', 'tile32x1', 'per-layer[...]')."""
+    if isinstance(granularity, str):
+        return granularity
+    if isinstance(granularity, tuple) and granularity and granularity[0] == "tile":
+        n_ox = granularity[2] if len(granularity) > 2 else 1
+        return f"tile{granularity[1]}x{n_ox}"
+    if isinstance(granularity, Mapping):
+        inner = ",".join(f"{k}:{granularity_label(v)}"
+                         for k, v in sorted(granularity.items()))
+        return f"per-layer[{inner}]"
+    return str(granularity)
+
+
+def _granularity_jsonable(granularity):
+    if isinstance(granularity, Mapping):
+        return {str(k): _granularity_jsonable(v)
+                for k, v in sorted(granularity.items())}
+    if isinstance(granularity, tuple):
+        return list(granularity)
+    return granularity
+
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    """Budget/seed of the genetic layer-core allocator for one point."""
+
+    pop_size: int = 24
+    generations: int = 16
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """One fully specified exploration: everything `explore()` needs."""
+
+    workload_name: str
+    workload: Workload
+    arch: ArchSpec
+    granularity: object
+    objective: str = "edp"
+    priority: str = "latency"
+    ga: GAConfig = GAConfig()
+
+    @property
+    def granularity_label(self) -> str:
+        return granularity_label(self.granularity)
+
+    def _spec_blob(self) -> str:
+        return json.dumps({
+            "workload": self.workload_name,
+            "workload_content": repr(self.workload.cache_key()),
+            "arch": self.arch.to_dict(),
+            "granularity": _granularity_jsonable(self.granularity),
+            "objective": self.objective,
+            "priority": self.priority,
+            "ga": dataclasses.asdict(self.ga),
+        }, sort_keys=True)
+
+    def spec_dict(self) -> dict:
+        """Full specification in canonical JSON types (round-trip stable:
+        tuples are already lists, so stored records compare equal)."""
+        return json.loads(self._spec_blob())
+
+    def content_key(self) -> str:
+        """Identity of the *result*: identical keys => identical metrics
+        (the whole pipeline is deterministic at a fixed GA seed)."""
+        return hashlib.sha256(self._spec_blob().encode()).hexdigest()[:24]
+
+
+# constraint predicates receive the DesignPoint; helpers below build common ones
+Constraint = Callable[[DesignPoint], bool]
+
+
+def min_act_mem(n_bytes: int) -> Constraint:
+    """Keep architectures with at least `n_bytes` of on-chip activation mem."""
+    def ok(p: DesignPoint) -> bool:
+        return p.arch.total_act_mem_bytes() >= n_bytes
+    return ok
+
+
+def max_cores(n: int) -> Constraint:
+    def ok(p: DesignPoint) -> bool:
+        return p.arch.n_cores <= n
+    return ok
+
+
+def fits_weights_on_chip() -> Constraint:
+    """Total weight SRAM must hold the workload's weights (no DRAM refetch)."""
+    def ok(p: DesignPoint) -> bool:
+        wmem = sum(c.weight_mem_bytes for c in p.arch.cores)
+        return wmem >= p.workload.total_weight_bytes
+    return ok
+
+
+def _normalize_workloads(workloads) -> dict[str, Workload]:
+    """Accept {name: Workload|factory}, [Workload], [(name, Workload)], or
+    registry names from `repro.configs.paper_workloads`."""
+    items: list[tuple[str, object]] = []
+    if isinstance(workloads, Mapping):
+        items = list(workloads.items())
+    else:
+        for entry in workloads:
+            if isinstance(entry, tuple):
+                items.append(entry)
+            elif isinstance(entry, Workload):
+                items.append((entry.name, entry))
+            elif isinstance(entry, str):
+                from repro.configs.paper_workloads import EXPLORATION_WORKLOADS
+                items.append((entry, EXPLORATION_WORKLOADS[entry]))
+            else:
+                items.append((getattr(entry, "__name__", str(entry)), entry))
+    out: dict[str, Workload] = {}
+    for name, wl in items:
+        wl = wl if isinstance(wl, Workload) else wl()
+        prev = out.get(str(name))
+        if prev is not None and prev.cache_key() != wl.cache_key():
+            raise ValueError(
+                f"two different workloads share the name {name!r}; "
+                "pass a mapping with distinct keys to disambiguate")
+        out[str(name)] = wl
+    return out
+
+
+def _normalize_archs(archs) -> dict[str, ArchSpec]:
+    """Mapping keys are authoritative: the spec is renamed to its key, so
+    two aliases of one catalog entry stay distinct points and records carry
+    the declared name."""
+    if isinstance(archs, Mapping):
+        return {str(n): as_arch_spec(a() if callable(a) else a).with_(name=str(n))
+                for n, a in archs.items()}
+    out: dict[str, ArchSpec] = {}
+    for a in archs:
+        spec = as_arch_spec(a() if callable(a) and not isinstance(a, ArchSpec)
+                            else a)
+        prev = out.get(spec.name)
+        if prev is not None and prev != spec:
+            raise ValueError(
+                f"two different architectures share the name {spec.name!r}; "
+                "rename one (or pass a mapping, whose keys rename the specs)")
+        out[spec.name] = spec
+    return out
+
+
+class DesignSpace:
+    """The declared cross-product; iterating yields constraint-filtered points.
+
+    >>> space = DesignSpace(workloads=["resnet18"],
+    ...                     archs=EXPLORATION_ARCHITECTURES,
+    ...                     granularities=["layer", ("tile", 32, 1)],
+    ...                     constraints=[max_cores(5)])
+    >>> len(space), next(iter(space))
+    """
+
+    def __init__(
+        self,
+        workloads,
+        archs,
+        granularities: Sequence = ("line",),
+        objectives: Sequence[str] = ("edp",),
+        priorities: Sequence[str] = ("latency",),
+        ga: GAConfig | None = None,
+        constraints: Iterable[Constraint] = (),
+    ):
+        self.workloads = _normalize_workloads(workloads)
+        self.archs = _normalize_archs(archs)
+        self.granularities = list(granularities)
+        self.objectives = list(objectives)
+        self.priorities = list(priorities)
+        self.ga = ga or GAConfig()
+        self.constraints = list(constraints)
+
+    def points(self) -> Iterator[DesignPoint]:
+        for wl_name, wl in self.workloads.items():
+            for arch in self.archs.values():
+                for gran in self.granularities:
+                    for obj in self.objectives:
+                        for prio in self.priorities:
+                            p = DesignPoint(
+                                workload_name=wl_name, workload=wl, arch=arch,
+                                granularity=gran, objective=obj, priority=prio,
+                                ga=self.ga)
+                            if all(c(p) for c in self.constraints):
+                                yield p
+
+    def __iter__(self) -> Iterator[DesignPoint]:
+        return self.points()
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.points())
+
+    def size_unconstrained(self) -> int:
+        return (len(self.workloads) * len(self.archs) * len(self.granularities)
+                * len(self.objectives) * len(self.priorities))
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"DesignSpace({len(self.workloads)} workloads x "
+                f"{len(self.archs)} archs x {len(self.granularities)} "
+                f"granularities x {len(self.objectives)} objectives x "
+                f"{len(self.priorities)} priorities"
+                + (f", {len(self.constraints)} constraints" if self.constraints
+                   else "") + ")")

@@ -1,0 +1,573 @@
+"""ExplorationSession: sweep-native exploration with owned caches, parallel
+executors, and a persistent result store.
+
+The session owns what used to be module-global state in
+`repro.core.stream_api` (CN-graph and engine caches), runs declarative
+`DesignSpace`s through a pluggable executor (in-process serial, or a
+`ProcessPoolExecutor` whose workers rebuild engines from the picklable
+point specs), and streams `ExplorationRecord`s into a content-keyed JSONL
+store — so re-running a sweep schedules only the points whose spec changed.
+
+    session = ExplorationSession(cache_dir=".stream_cache")
+    sweep = session.run(space, executor="process")
+    sweep.best("edp"), sweep.pareto(("latency_cc", "energy_pj"))
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import multiprocessing
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from repro.api.archspec import ArchSpec
+from repro.api.designspace import DesignPoint, DesignSpace, granularity_label
+from repro.core.allocator import feasible_cores_per_layer
+from repro.core.cn import identify_cns
+from repro.core.costmodel import CostModel
+from repro.core.depgraph import CNGraph, build_cn_graph
+from repro.core.ga import GeneticAllocator
+from repro.core.scheduler import ScheduleEngine, ScheduleResult, get_engine
+from repro.core.stream_api import StreamResult, core_symmetry_cache_key, \
+    hw_min_tiles
+from repro.core.workload import Workload
+from repro.hw.accelerator import Accelerator
+
+DEFAULT_GRANULARITIES = ("layer", ("tile", 8, 1), ("tile", 16, 1),
+                         ("tile", 32, 1), ("tile", 64, 1))
+
+_OBJECTIVE_METRIC = {"edp": "edp", "latency": "latency_cc",
+                     "energy": "energy_pj"}
+
+
+# ---------------------------------------------------------------------------
+# construction cache keys: the CN graph depends only on (workload content,
+# granularity, HW minimum tiles) and the engine additionally on the
+# accelerator — both are pure builds, so sessions memoize them
+# content-keyed (safe under workload mutation).
+# ---------------------------------------------------------------------------
+
+def _granularity_key(granularity) -> tuple:
+    if isinstance(granularity, dict):
+        return ("per-layer", tuple(sorted(granularity.items())))
+    return ("uniform", granularity)
+
+
+def _effective_min_tile(granularity, min_tile: dict) -> tuple:
+    """Restrict `min_tile` to the components that can affect the CN split.
+
+    `resolve_splits` only consults `min_tile[d]` when the granularity asks
+    for more than one part along `d` and the tile is > 1, so e.g. an OX
+    unroll constraint is irrelevant to row-band granularities — dropping it
+    from the cache key lets architectures with different dataflows share one
+    CN graph when their splits provably coincide."""
+    if granularity == "layer":
+        return ()
+    if granularity == "line":
+        dims = ("OY",)
+    elif isinstance(granularity, tuple) and granularity[0] == "tile":
+        n_ox = int(granularity[2]) if len(granularity) > 2 else 1
+        dims = tuple(d for d, parts in (("OY", int(granularity[1])), ("OX", n_ox))
+                     if parts > 1)
+    else:  # per-layer dict or unknown: keep the full constraint
+        return tuple(sorted(min_tile.items()))
+    return tuple(sorted((d, v) for d, v in min_tile.items() if d in dims and v > 1))
+
+
+def _graph_key(workload: Workload, granularity, min_tile: dict) -> tuple:
+    return (workload.cache_key(), _granularity_key(granularity),
+            _effective_min_tile(granularity, min_tile))
+
+
+class FifoCache:
+    """Bounded first-in-first-out cache.
+
+    Eviction is strictly by *insertion* order — a lookup hit does not
+    refresh an entry's position (this is FIFO, not LRU), which keeps the
+    eviction order independent of access patterns and therefore
+    deterministic across executors.  Hit/miss counters are exposed for the
+    session's `cache_stats`."""
+
+    _MISS = object()
+
+    def __init__(self, limit: int):
+        self.limit = int(limit)
+        self._data: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        value = self._data.get(key, self._MISS)
+        if value is self._MISS:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return value
+
+    def put(self, key, value) -> None:
+        if key not in self._data and len(self._data) >= self.limit:
+            self._data.pop(next(iter(self._data)))
+        self._data[key] = value
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def keys(self):
+        return self._data.keys()
+
+    def clear(self) -> None:
+        self._data.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplorationRecord:
+    """Serializable outcome of one design point (one `explore()` call)."""
+
+    key: str                       # DesignPoint.content_key()
+    workload: str
+    arch: str
+    arch_key: str
+    granularity: str               # canonical label, e.g. 'tile32x1'
+    objective: str
+    priority: str
+    latency_cc: float
+    energy_pj: float
+    edp: float
+    peak_mem_bytes: float
+    act_peak_bytes: float
+    allocation: tuple[int, ...]
+    ga_evaluations: int
+    runtime_s: float
+    energy_breakdown: dict | None = None   # pj per component (mac/sram/...)
+    spec: dict | None = None       # full point spec: result is reproducible
+    from_store: bool = False       # True when served from the persistent store
+
+    def metric(self, name: str) -> float:
+        return float(getattr(self, _OBJECTIVE_METRIC.get(name, name)))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("from_store")
+        d["allocation"] = list(self.allocation)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ExplorationRecord":
+        d = dict(d)
+        d.pop("from_store", None)
+        d["allocation"] = tuple(int(x) for x in d["allocation"])
+        return cls(**d)
+
+
+def best_record(records: Sequence[ExplorationRecord],
+                metric: str = "edp") -> ExplorationRecord:
+    if not records:
+        raise ValueError("no records")
+    return min(records, key=lambda r: r.metric(metric))
+
+
+def pareto_records(records: Sequence[ExplorationRecord],
+                   metrics: Sequence[str] = ("latency_cc", "energy_pj"),
+                   ) -> list[ExplorationRecord]:
+    """Non-dominated subset, all metrics minimized; input order preserved."""
+    vals = [tuple(r.metric(m) for m in metrics) for r in records]
+    out = []
+    for i, (r, v) in enumerate(zip(records, vals)):
+        dominated = any(
+            all(w[k] <= v[k] for k in range(len(v))) and w != v
+            for j, w in enumerate(vals) if j != i)
+        if not dominated:
+            out.append(r)
+    return out
+
+
+def pivot_records(records: Sequence[ExplorationRecord], rows: str = "arch",
+                  cols: str = "workload", value: str = "edp",
+                  agg: Callable[[Sequence[float]], float] = min,
+                  ) -> dict[str, dict[str, float]]:
+    """Per-axis pivot (the paper's Fig.-13-style tables): rows x cols ->
+    `agg` over the `value` metric of every matching record."""
+    cells: dict[str, dict[str, list[float]]] = {}
+    for r in records:
+        row, col = str(getattr(r, rows)), str(getattr(r, cols))
+        cells.setdefault(row, {}).setdefault(col, []).append(r.metric(value))
+    return {row: {col: float(agg(vs)) for col, vs in colmap.items()}
+            for row, colmap in cells.items()}
+
+
+@dataclasses.dataclass
+class GranularitySweep:
+    """Typed result of a granularity co-exploration (no stringly 'best' key)."""
+
+    results: dict[str, StreamResult]   # granularity label -> full result
+    objective: str
+    best_label: str
+
+    @property
+    def best(self) -> StreamResult:
+        return self.results[self.best_label]
+
+    def items(self):
+        return self.results.items()
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Outcome of `ExplorationSession.run`: records in point order plus
+    scheduling accounting (how many points actually ran vs store hits)."""
+
+    records: list[ExplorationRecord]
+    n_scheduled: int
+    n_from_store: int
+    wall_s: float
+
+    def best(self, metric: str = "edp") -> ExplorationRecord:
+        return best_record(self.records, metric)
+
+    def pareto(self, metrics: Sequence[str] = ("latency_cc", "energy_pj"),
+               ) -> list[ExplorationRecord]:
+        return pareto_records(self.records, metrics)
+
+    def pivot(self, rows: str = "arch", cols: str = "workload",
+              value: str = "edp", agg=min) -> dict[str, dict[str, float]]:
+        return pivot_records(self.records, rows, cols, value, agg)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+class ResultStore:
+    """Content-keyed persistent record store (JSONL, append-only).
+
+    With a `cache_dir` every record is appended to `records.jsonl` as it
+    arrives and reloaded on construction (last write wins), making repeated
+    sweeps incremental across processes and sessions; with `cache_dir=None`
+    the store is memory-only and lives as long as the session."""
+
+    FILENAME = "records.jsonl"
+
+    def __init__(self, cache_dir: str | None = None):
+        self._records: dict[str, ExplorationRecord] = {}
+        self.path: str | None = None
+        if cache_dir is not None:
+            os.makedirs(cache_dir, exist_ok=True)
+            self.path = os.path.join(cache_dir, self.FILENAME)
+            if os.path.exists(self.path):
+                with open(self.path) as f:
+                    for line in f:
+                        line = line.strip()
+                        if not line:
+                            continue
+                        try:
+                            rec = ExplorationRecord.from_dict(json.loads(line))
+                        except (ValueError, KeyError, TypeError):
+                            # torn tail line from an interrupted append:
+                            # drop it (the point just gets re-scheduled)
+                            continue
+                        self._records[rec.key] = rec
+
+    def get(self, key: str) -> ExplorationRecord | None:
+        return self._records.get(key)
+
+    def put(self, record: ExplorationRecord) -> None:
+        self._records[record.key] = record
+        if self.path is not None:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(record.to_dict()) + "\n")
+
+    def values(self) -> list[ExplorationRecord]:
+        return list(self._records.values())
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._records
+
+
+# ---------------------------------------------------------------------------
+# process-pool worker: rebuilds engines from the picklable point spec in a
+# process-local session (caches warm up per worker, results return as dicts)
+# ---------------------------------------------------------------------------
+_WORKER_SESSION: "ExplorationSession | None" = None
+
+
+def _process_worker(point: DesignPoint) -> dict:
+    global _WORKER_SESSION
+    if _WORKER_SESSION is None:
+        _WORKER_SESSION = ExplorationSession()
+    return _WORKER_SESSION._compute_record(point).to_dict()
+
+
+class ExplorationSession:
+    """Owns exploration state: graph/engine caches, the result store, and
+    the executors that walk a `DesignSpace`."""
+
+    def __init__(self, cache_dir: str | None = None, cache_limit: int = 32,
+                 max_workers: int | None = None):
+        self._graphs = FifoCache(cache_limit)
+        self._engines = FifoCache(cache_limit)
+        self.store = ResultStore(cache_dir)
+        self.max_workers = max_workers
+
+    # ---- cache introspection --------------------------------------------
+    @property
+    def cache_stats(self) -> dict[str, int]:
+        return {"graph_hits": self._graphs.hits,
+                "graph_misses": self._graphs.misses,
+                "graph_entries": len(self._graphs),
+                "engine_hits": self._engines.hits,
+                "engine_misses": self._engines.misses,
+                "engine_entries": len(self._engines)}
+
+    def clear_caches(self) -> None:
+        self._graphs.clear()
+        self._engines.clear()
+
+    # ---- construction-memoized building blocks ---------------------------
+    @staticmethod
+    def _materialize(arch: "ArchSpec | Accelerator") -> Accelerator:
+        return arch.to_accelerator() if isinstance(arch, ArchSpec) else arch
+
+    def graph(self, workload: Workload, arch: "ArchSpec | Accelerator",
+              granularity, use_rtree: bool = True) -> CNGraph:
+        """CN graph for (workload content, granularity, HW min tiles)."""
+        accelerator = self._materialize(arch)
+        min_tile = hw_min_tiles(accelerator)
+        key = (_graph_key(workload, granularity, min_tile), use_rtree)
+        graph = self._graphs.get(key)
+        if graph is None:
+            cns = identify_cns(workload, granularity, min_tile)
+            graph = build_cn_graph(workload, cns, use_rtree=use_rtree)
+            self._graphs.put(key, graph)
+        return graph
+
+    def engine(self, workload: Workload, arch: "ArchSpec | Accelerator",
+               granularity) -> ScheduleEngine:
+        """Precomputed schedule engine (CSR graph + dense cost tables)."""
+        accelerator = self._materialize(arch)
+        min_tile = hw_min_tiles(accelerator)
+        gkey = (_graph_key(workload, granularity, min_tile), True)
+        key = (gkey, accelerator)
+        graph = self.graph(workload, accelerator, granularity)
+        hit = self._engines.get(key)
+        if hit is not None and hit[0] is graph:
+            return hit[1]
+        engine = get_engine(graph, CostModel(workload, accelerator), accelerator)
+        self._engines.put(key, (graph, engine))
+        return engine
+
+    # ---- single-point exploration ----------------------------------------
+    def explore(
+        self,
+        workload: Workload,
+        arch: "ArchSpec | Accelerator",
+        granularity="line",
+        objective: str = "edp",
+        priority: str = "latency",
+        pop_size: int = 24,
+        generations: int = 16,
+        seed: int = 0,
+        initial_allocations=(),
+    ) -> StreamResult:
+        """Steps 1-5 for one design point (the former `explore()` body)."""
+        t0 = time.perf_counter()
+        accelerator = self._materialize(arch)
+        engine = self.engine(workload, accelerator, granularity)
+        graph = engine.graph
+        feas = feasible_cores_per_layer(workload, accelerator)
+
+        strict = granularity == "layer"  # traditional LBL: no overlap
+
+        def evaluate(genome: np.ndarray) -> tuple[float, float]:
+            # fitness only needs latency/energy: timing model without traces
+            return engine.evaluate(genome, priority, strict_layers=strict)
+
+        scalarize = {
+            "edp": lambda o: float(o[0] * o[1]),
+            "latency": lambda o: float(o[0]),
+            "energy": lambda o: float(o[1]),
+        }[objective]
+
+        if len(workload) == 1 or all(len(f) == 1 for f in feas):
+            alloc = np.array([f[0] for f in feas])
+            ga_res = None
+        else:
+            ga = GeneticAllocator(
+                n_genes=len(workload), feasible_cores=feas, evaluate=evaluate,
+                pop_size=pop_size, generations=generations,
+                scalarize=scalarize, seed=seed,
+                cache_key=core_symmetry_cache_key(accelerator),
+            )
+            ga_res = ga.run(initial=initial_allocations)
+            alloc = ga_res.best_genome
+
+        final = engine.schedule(alloc, priority, strict_layers=strict)
+        return StreamResult(
+            schedule=final, allocation=alloc, ga=ga_res, graph=graph,
+            runtime_s=time.perf_counter() - t0, granularity=granularity,
+        )
+
+    def evaluate_allocation(
+        self,
+        workload: Workload,
+        arch: "ArchSpec | Accelerator",
+        allocation,
+        granularity="line",
+        priority: str = "latency",
+        graph: CNGraph | None = None,
+        engine: ScheduleEngine | None = None,
+    ) -> ScheduleResult:
+        """Schedule a fixed layer-core allocation (validation benches)."""
+        accelerator = self._materialize(arch)
+        if engine is None:
+            if graph is not None:
+                engine = get_engine(graph, CostModel(workload, accelerator),
+                                    accelerator)
+            else:
+                engine = self.engine(workload, accelerator, granularity)
+        return engine.schedule(np.asarray(allocation), priority,
+                               strict_layers=(granularity == "layer"))
+
+    def explore_granularity(
+        self,
+        workload: Workload,
+        arch: "ArchSpec | Accelerator",
+        granularities=DEFAULT_GRANULARITIES,
+        objective: str = "edp",
+        **kw,
+    ) -> GranularitySweep:
+        """Co-explore scheduling granularity with allocation (paper Sec. V)."""
+        results = {granularity_label(g): self.explore(
+            workload, arch, granularity=g, objective=objective, **kw)
+            for g in granularities}
+        metric = _OBJECTIVE_METRIC[objective]
+        best_label = min(results, key=lambda k: getattr(results[k], metric))
+        return GranularitySweep(results=results, objective=objective,
+                                best_label=best_label)
+
+    # ---- sweep execution -------------------------------------------------
+    def _compute_record(self, point: DesignPoint) -> ExplorationRecord:
+        res = self.explore(
+            point.workload, point.arch, granularity=point.granularity,
+            objective=point.objective, priority=point.priority,
+            pop_size=point.ga.pop_size, generations=point.ga.generations,
+            seed=point.ga.seed)
+        return ExplorationRecord(
+            key=point.content_key(), workload=point.workload_name,
+            arch=point.arch.name, arch_key=point.arch.content_key(),
+            granularity=point.granularity_label, objective=point.objective,
+            priority=point.priority, latency_cc=float(res.latency_cc),
+            energy_pj=float(res.energy_pj), edp=float(res.edp),
+            peak_mem_bytes=float(res.peak_mem_bytes),
+            act_peak_bytes=float(res.schedule.act_peak_bytes),
+            allocation=tuple(int(x) for x in res.allocation),
+            ga_evaluations=res.ga.evaluations if res.ga is not None else 0,
+            runtime_s=res.runtime_s,
+            energy_breakdown={k: float(v) for k, v in
+                              res.schedule.energy_breakdown.items()},
+            spec=point.spec_dict())
+
+    def run(
+        self,
+        space: "DesignSpace | Iterable[DesignPoint]",
+        executor: str = "serial",          # 'serial' | 'process'
+        max_workers: int | None = None,
+        progress: Callable[[ExplorationRecord], None] | None = None,
+    ) -> SweepResult:
+        """Walk a design space; store hits are served without scheduling.
+
+        Both executors produce bit-identical metrics for every point (the
+        pipeline is deterministic at a fixed GA seed); 'process' fans the
+        *new* points out to worker processes that rebuild engines locally
+        from the picklable point specs."""
+        t0 = time.perf_counter()
+        points = list(space)
+        order: list[str] = []
+        served: dict[str, ExplorationRecord] = {}
+        todo: list[DesignPoint] = []
+        queued: set[str] = set()
+        store_hits = 0
+        for p in points:
+            key = p.content_key()
+            order.append(key)
+            if key in served or key in queued:
+                continue  # duplicate point within this run
+            hit = self.store.get(key)
+            if hit is not None:
+                served[key] = dataclasses.replace(hit, from_store=True)
+                store_hits += 1
+            else:
+                todo.append(p)
+                queued.add(key)
+
+        def _ingest(rec: ExplorationRecord) -> None:
+            self.store.put(rec)
+            served[rec.key] = rec
+            if progress is not None:
+                progress(rec)
+
+        if executor == "serial":
+            for p in todo:
+                _ingest(self._compute_record(p))
+        elif executor == "process":
+            workers = max_workers or self.max_workers or os.cpu_count() or 1
+            if todo:
+                # spawn, not fork: callers routinely have jax (multithreaded)
+                # imported, and forking a threaded process can deadlock
+                ctx = multiprocessing.get_context("spawn")
+                with ProcessPoolExecutor(max_workers=workers,
+                                         mp_context=ctx) as pool:
+                    for rec_dict in pool.map(_process_worker, todo):
+                        _ingest(ExplorationRecord.from_dict(rec_dict))
+        else:
+            raise ValueError(f"unknown executor {executor!r} "
+                             "(expected 'serial' or 'process')")
+        return SweepResult(records=[served[k] for k in order],
+                           n_scheduled=len(todo),
+                           n_from_store=store_hits,
+                           wall_s=time.perf_counter() - t0)
+
+    # ---- queries over everything this session has seen -------------------
+    def records(self) -> list[ExplorationRecord]:
+        return self.store.values()
+
+    def best(self, metric: str = "edp",
+             records: Sequence[ExplorationRecord] | None = None,
+             ) -> ExplorationRecord:
+        return best_record(self.records() if records is None else records,
+                           metric)
+
+    def pareto(self, metrics: Sequence[str] = ("latency_cc", "energy_pj"),
+               records: Sequence[ExplorationRecord] | None = None,
+               ) -> list[ExplorationRecord]:
+        return pareto_records(self.records() if records is None else records,
+                              metrics)
+
+    def pivot(self, rows: str = "arch", cols: str = "workload",
+              value: str = "edp", agg=min,
+              records: Sequence[ExplorationRecord] | None = None,
+              ) -> dict[str, dict[str, float]]:
+        return pivot_records(self.records() if records is None else records,
+                             rows, cols, value, agg)
+
+
+# ---------------------------------------------------------------------------
+# default session backing the `repro.core.stream_api` compatibility wrappers
+# ---------------------------------------------------------------------------
+_DEFAULT_SESSION: ExplorationSession | None = None
+
+
+def default_session() -> ExplorationSession:
+    """Lazily created memory-only session shared by the legacy one-call API."""
+    global _DEFAULT_SESSION
+    if _DEFAULT_SESSION is None:
+        _DEFAULT_SESSION = ExplorationSession()
+    return _DEFAULT_SESSION

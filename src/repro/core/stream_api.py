@@ -6,20 +6,22 @@
 runs Steps 1-5: CN identification (HW-dataflow-aware minimum tiles), R-tree
 dependency generation, intra-core cost extraction, GA layer-core allocation
 (NSGA-II on [latency, energy]), and prioritized multi-core scheduling.
+
+This module is the *single-point* compatibility surface.  The sweep-native
+API — `ArchSpec`, `DesignSpace`, `ExplorationSession` with parallel
+executors and a persistent result store — lives in `repro.api`; the
+functions here delegate to a shared default `ExplorationSession`, which owns
+the graph/engine caches that older revisions kept as module globals.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
-from repro.core.allocator import feasible_cores_per_layer
-from repro.core.cn import identify_cns
-from repro.core.costmodel import CostModel
-from repro.core.depgraph import CNGraph, build_cn_graph
-from repro.core.ga import GAResult, GeneticAllocator
-from repro.core.scheduler import ScheduleEngine, ScheduleResult, get_engine
+from repro.core.depgraph import CNGraph
+from repro.core.ga import GAResult
+from repro.core.scheduler import ScheduleEngine, ScheduleResult
 from repro.core.workload import Workload
 from repro.hw.accelerator import Accelerator
 
@@ -99,80 +101,17 @@ class StreamResult:
         return self.schedule.peak_mem_bytes
 
 
-# ---------------------------------------------------------------------------
-# construction memoization: the CN graph depends only on (workload content,
-# granularity, HW minimum tiles) and the engine additionally on the
-# accelerator — both are pure builds, so repeated explorations (e.g. a sweep
-# of architectures over the same networks) reuse them instead of rebuilding.
-# Bounded FIFO caches; content keys make them safe under workload mutation.
-# ---------------------------------------------------------------------------
-_GRAPH_CACHE: dict[tuple, CNGraph] = {}
-_ENGINE_CACHE: dict[tuple, tuple[CNGraph, ScheduleEngine]] = {}
-_CACHE_LIMIT = 32
-
-
-def _granularity_key(granularity) -> tuple:
-    if isinstance(granularity, dict):
-        return ("per-layer", tuple(sorted(granularity.items())))
-    return ("uniform", granularity)
-
-
-def _effective_min_tile(granularity, min_tile: dict) -> tuple:
-    """Restrict `min_tile` to the components that can affect the CN split.
-
-    `resolve_splits` only consults `min_tile[d]` when the granularity asks
-    for more than one part along `d` and the tile is > 1, so e.g. an OX
-    unroll constraint is irrelevant to row-band granularities — dropping it
-    from the cache key lets architectures with different dataflows share one
-    CN graph when their splits provably coincide."""
-    if granularity == "layer":
-        return ()
-    if granularity == "line":
-        dims = ("OY",)
-    elif isinstance(granularity, tuple) and granularity[0] == "tile":
-        n_ox = int(granularity[2]) if len(granularity) > 2 else 1
-        dims = tuple(d for d, parts in (("OY", int(granularity[1])), ("OX", n_ox))
-                     if parts > 1)
-    else:  # per-layer dict or unknown: keep the full constraint
-        return tuple(sorted(min_tile.items()))
-    return tuple(sorted((d, v) for d, v in min_tile.items() if d in dims and v > 1))
-
-
-def _graph_key(workload: Workload, granularity, min_tile: dict) -> tuple:
-    return (workload.cache_key(), _granularity_key(granularity),
-            _effective_min_tile(granularity, min_tile))
-
-
-def _fifo_put(cache: dict, key, value) -> None:
-    if len(cache) >= _CACHE_LIMIT:
-        cache.pop(next(iter(cache)))
-    cache[key] = value
+def _session():
+    # imported lazily to keep `repro.core` importable without (and before)
+    # the `repro.api` package — see the import-order note in repro.api.session
+    from repro.api.session import default_session
+    return default_session()
 
 
 def build_graph(workload: Workload, accelerator: Accelerator, granularity,
                 use_rtree: bool = True) -> CNGraph:
-    min_tile = hw_min_tiles(accelerator)
-    key = (_graph_key(workload, granularity, min_tile), use_rtree)
-    graph = _GRAPH_CACHE.get(key)
-    if graph is None:
-        cns = identify_cns(workload, granularity, min_tile)
-        graph = build_cn_graph(workload, cns, use_rtree=use_rtree)
-        _fifo_put(_GRAPH_CACHE, key, graph)
-    return graph
-
-
-def _cached_engine(workload: Workload, accelerator: Accelerator,
-                   granularity) -> ScheduleEngine:
-    min_tile = hw_min_tiles(accelerator)
-    gkey = (_graph_key(workload, granularity, min_tile), True)
-    key = (gkey, accelerator)
-    graph = build_graph(workload, accelerator, granularity)
-    hit = _ENGINE_CACHE.get(key)
-    if hit is not None and hit[0] is graph:
-        return hit[1]
-    engine = get_engine(graph, CostModel(workload, accelerator), accelerator)
-    _fifo_put(_ENGINE_CACHE, key, (graph, engine))
-    return engine
+    return _session().graph(workload, accelerator, granularity,
+                            use_rtree=use_rtree)
 
 
 def evaluate_allocation(
@@ -188,14 +127,9 @@ def evaluate_allocation(
 
     Pass `engine` (from a previous call or `ScheduleEngine(...)`) to reuse the
     precomputed CSR graph + cost tables across many allocations."""
-    if engine is None:
-        if graph is not None:
-            engine = get_engine(graph, CostModel(workload, accelerator), accelerator)
-        else:
-            engine = _cached_engine(workload, accelerator, granularity)
-    # 'layer' granularity == traditional layer-by-layer: strictly sequential
-    return engine.schedule(np.asarray(allocation), priority,
-                           strict_layers=(granularity == "layer"))
+    return _session().evaluate_allocation(
+        workload, accelerator, allocation, granularity=granularity,
+        priority=priority, graph=graph, engine=engine)
 
 
 def explore(
@@ -209,64 +143,29 @@ def explore(
     seed: int = 0,
     initial_allocations=(),
 ) -> StreamResult:
-    t0 = time.perf_counter()
-    # one precomputed engine (CSR graph + dense cost tables) shared by every
-    # GA genome evaluation of this exploration — and, via the content-keyed
-    # caches, by later explorations of the same (workload, granularity, arch)
-    engine = _cached_engine(workload, accelerator, granularity)
-    graph = engine.graph
-    feas = feasible_cores_per_layer(workload, accelerator)
-
-    strict = granularity == "layer"  # traditional LBL: no cross-layer overlap
-
-    def evaluate(genome: np.ndarray) -> tuple[float, float]:
-        # fitness only needs latency/energy: run the timing model without
-        # the observational memory/interval traces (identical results)
-        return engine.evaluate(genome, priority, strict_layers=strict)
-
-    scalarize = {
-        "edp": lambda o: float(o[0] * o[1]),
-        "latency": lambda o: float(o[0]),
-        "energy": lambda o: float(o[1]),
-    }[objective]
-
-    if len(workload) == 1 or all(len(f) == 1 for f in feas):
-        alloc = np.array([f[0] for f in feas])
-        ga_res = None
-    else:
-        ga = GeneticAllocator(
-            n_genes=len(workload), feasible_cores=feas, evaluate=evaluate,
-            pop_size=pop_size, generations=generations, scalarize=scalarize,
-            seed=seed, cache_key=core_symmetry_cache_key(accelerator),
-        )
-        ga_res = ga.run(initial=initial_allocations)
-        alloc = ga_res.best_genome
-
-    final = engine.schedule(alloc, priority, strict_layers=strict)
-    return StreamResult(
-        schedule=final, allocation=alloc, ga=ga_res, graph=graph,
-        runtime_s=time.perf_counter() - t0, granularity=granularity,
-    )
+    return _session().explore(
+        workload, accelerator, granularity=granularity, objective=objective,
+        priority=priority, pop_size=pop_size, generations=generations,
+        seed=seed, initial_allocations=initial_allocations)
 
 
 def explore_granularity(
     workload: Workload,
     accelerator: Accelerator,
-    granularities=("layer", ("tile", 8, 1), ("tile", 16, 1), ("tile", 32, 1),
-                   ("tile", 64, 1)),
+    granularities=None,   # default: repro.api.session.DEFAULT_GRANULARITIES
     objective: str = "edp",
     **kw,
 ) -> dict:
     """Co-explore scheduling granularity with allocation (paper Sec. V
     summary: "quantitatively and automatically co-explore the optimal
     scheduling granularity"). Returns {granularity: StreamResult} plus the
-    objective-best key under 'best'."""
-    results: dict = {}
-    for g in granularities:
-        key = g if isinstance(g, str) else f"tile{g[1]}x{g[2]}"
-        results[key] = explore(workload, accelerator, granularity=g,
-                               objective=objective, **kw)
-    metric = {"edp": lambda r: r.edp, "latency": lambda r: r.latency_cc,
-              "energy": lambda r: r.energy_pj}[objective]
-    results["best"] = min((k for k in results), key=lambda k: metric(results[k]))
+    objective-best key under 'best' — legacy shape; prefer
+    `ExplorationSession.explore_granularity`, which returns a typed
+    `GranularitySweep` instead of mixing the winner into the results dict."""
+    kw = dict(kw, objective=objective)
+    if granularities is not None:
+        kw["granularities"] = granularities
+    sweep = _session().explore_granularity(workload, accelerator, **kw)
+    results: dict = dict(sweep.results)
+    results["best"] = sweep.best_label
     return results

@@ -1,0 +1,68 @@
+"""Version shims for jax APIs that moved between releases.
+
+The repo targets current jax (`jax.make_mesh(axis_types=...)`,
+`jax.set_mesh`, `jax.shard_map`), but the pinned environment may ship an
+older release (e.g. 0.4.x) where these live elsewhere or don't exist.
+Everything version-dependent is funneled through this module so call sites
+stay on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def compat_make_mesh(shape, axes, **kw):
+    """`jax.make_mesh` across jax versions.
+
+    Newer jax wants explicit `axis_types` (we always use Auto); older
+    releases neither accept the kwarg nor define `jax.sharding.AxisType` —
+    accessing it raises AttributeError via the deprecation machinery."""
+    axis_type_auto = getattr(getattr(jax.sharding, "AxisType", None), "Auto",
+                             None)
+    if axis_type_auto is not None:
+        kw.setdefault("axis_types", (axis_type_auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **kw)
+
+
+def compat_set_mesh(mesh):
+    """Context manager activating `mesh`, across jax versions.
+
+    Newer jax: `jax.set_mesh(mesh)` (also usable as a context manager).
+    Older jax: no `set_mesh`; entering the `Mesh` object itself activates
+    it for the with-block."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def compat_shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+    """`jax.shard_map` across jax versions.
+
+    Older releases only have `jax.experimental.shard_map.shard_map`, whose
+    replication check is spelled `check_rep` instead of `check_vma`."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental import shard_map as sm_mod
+    _patch_old_shard_map_rules(sm_mod)
+    # check_vma=False maps to check_rep=True, not False: the old
+    # replication checker is what lets autodiff transpose psum outputs
+    # (with check_rep=False, grad through a replicated out_spec raises
+    # _SpecError), and our kernels all satisfy it.
+    return sm_mod.shard_map(f, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
+
+
+def _patch_old_shard_map_rules(sm_mod) -> None:
+    """Old shard_map lacks replication rules for a few newer primitives.
+
+    `name_p` (from `jax.ad_checkpoint.checkpoint_name`, used by remat
+    policies) is elementwise-identity, so the standard rules are exact."""
+    try:
+        from jax._src.ad_checkpoint import name_p
+    except ImportError:  # pragma: no cover - layout differs on newer jax
+        return
+    sm_mod.register_standard_check(name_p)
+    sm_mod.register_standard_rewrite(name_p)

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, reduce_config
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (compat_set_mesh, make_host_mesh,
+                               make_production_mesh)
 from repro.models.module import init_from_specs
 from repro.models.zoo import build_param_specs
 from repro.sharding.rules import tree_shardings
@@ -86,7 +87,7 @@ def main(argv=None):
     train_step = jax.jit(make_train_step(cfg, mesh, step_cfg),
                          donate_argnums=(0, 1))
     params, opt = state["params"], state["opt"]
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         t_last = time.perf_counter()
         for step in range(start, args.steps):
             batch = {k: jnp.asarray(v) for k, v in

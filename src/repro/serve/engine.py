@@ -16,6 +16,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import zoo
 from repro.models.module import init_from_specs
+from repro.launch.mesh import compat_set_mesh
 
 
 @dataclasses.dataclass
@@ -59,7 +60,7 @@ class ServeEngine:
         for i, r in enumerate(requests):
             p = r.prompt[-S:]
             prompts[i, S - len(p):] = p
-        with jax.set_mesh(self.mesh):
+        with compat_set_mesh(self.mesh):
             logits, self.caches = self._prefill(
                 self.params, {"tokens": jnp.asarray(prompts)}, self.caches)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -20,6 +20,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models import transformer as tfm
 from repro.models.module import is_spec, spec_tree_map
+from repro.jax_compat import compat_shard_map
 
 F32 = jnp.float32
 
@@ -74,7 +75,10 @@ def make_pipeline_loss(cfg: ArchConfig, mesh, *, n_stages: int,
 
             n_steps = n_microbatches + n_stages - 1
             buf = jnp.zeros((mb, S, cfg.d_model), cfg.dtype)
-            loss_acc = jnp.zeros((), F32)
+            # (1,)-shaped, not scalar: scalar f32 carries become scalar
+            # residuals of the shard_map body, which older jax's
+            # partial-eval cannot assign residual axis-names to
+            loss_acc = jnp.zeros((1,), F32)
 
             def step(carry, t):
                 x_prev, loss_acc = carry
@@ -106,18 +110,20 @@ def make_pipeline_loss(cfg: ArchConfig, mesh, *, n_stages: int,
             params_embed_holder = (embed,)
             (x, loss_acc), _ = jax.lax.scan(
                 step, (buf, loss_acc), jnp.arange(n_steps))
-            # only the last stage holds the loss; share it
-            loss = jax.lax.psum(
-                jnp.where(stage == n_stages - 1, loss_acc, 0.0), axis)
-            return loss / n_microbatches
+            # only the last stage holds a nonzero loss; emit per-stage
+            # values (device-varying out_spec) and reduce outside the
+            # shard_map — replicated scalar outputs are not transposable
+            # under older jax's shard_map, a psum here breaks jax.grad
+            return jnp.where(stage == n_stages - 1, loss_acc, 0.0)
 
         head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-        return jax.shard_map(
+        per_stage = compat_shard_map(
             stage_fn, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(axis), params["layers"]),
                       P(), P(), P(), P(), P()),
-            out_specs=P(), check_vma=False,
+            out_specs=P(axis), check_vma=False,
         )(params["layers"], params["embed"],
           params["final_norm"]["scale"], head, tok_mb, lab_mb)
+        return per_stage.sum() / n_microbatches
 
     return loss_fn

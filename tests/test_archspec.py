@@ -1,0 +1,115 @@
+"""ArchSpec / DesignSpace: declarative specs round-trip the hw catalog
+exactly, content keys track content, and constraints prune the grid before
+any scheduling work."""
+import json
+
+import pytest
+
+from repro.api import (ArchSpec, CoreSpec, DesignPoint, DesignSpace, GAConfig,
+                       as_arch_spec, catalog_specs, granularity_label,
+                       max_cores, min_act_mem)
+from repro.configs.paper_workloads import resnet18
+from repro.hw.catalog import (EXPLORATION_ARCHITECTURES,
+                              VALIDATION_ARCHITECTURES, mc_hetero, simd_core)
+
+pytestmark = pytest.mark.tier1
+
+ALL_ARCHS = {**EXPLORATION_ARCHITECTURES, **VALIDATION_ARCHITECTURES}
+
+
+@pytest.mark.parametrize("name", sorted(ALL_ARCHS))
+def test_catalog_round_trip(name):
+    acc = ALL_ARCHS[name]()
+    spec = ArchSpec.from_accelerator(acc)
+    assert spec.to_accelerator() == acc          # exact materialization
+    assert ArchSpec.from_json(spec.to_json()) == spec   # exact JSON round-trip
+    json.loads(spec.to_json())                   # valid JSON document
+
+
+def test_content_key_tracks_content():
+    a = ArchSpec.from_accelerator(mc_hetero())
+    b = ArchSpec.from_accelerator(mc_hetero())
+    assert a.content_key() == b.content_key()
+    c = a.with_(bus_bw_bits_per_cc=a.bus_bw_bits_per_cc * 2)
+    assert c.content_key() != a.content_key()
+
+
+def test_catalog_specs_helper():
+    specs = catalog_specs(["MC:Hetero", "DIANA"])
+    assert set(specs) == {"MC:Hetero", "DIANA"}
+    assert specs["DIANA"].comm_style == "shared_mem"
+    assert as_arch_spec(specs["MC:Hetero"]) is specs["MC:Hetero"]
+
+
+def test_grid_cross_product():
+    tpl = CoreSpec.from_core(mc_hetero().cores[2])
+    grid = ArchSpec.grid(tpl, cores=[2, 4], act_mem_bytes=[64 << 10, 112 << 10],
+                         simd=simd_core())
+    assert len(grid) == 4
+    assert {g.n_cores for g in grid} == {3, 5}   # n compute + shared simd
+    assert len({g.content_key() for g in grid}) == 4
+    two_core = [g for g in grid if g.n_cores == 3][0]
+    assert two_core.cores[0].name.endswith("0")
+    assert two_core.cores[-1].core_type == "simd"
+
+
+def test_granularity_labels():
+    assert granularity_label("layer") == "layer"
+    assert granularity_label("line") == "line"
+    assert granularity_label(("tile", 32, 1)) == "tile32x1"
+    assert granularity_label(("tile", 8)) == "tile8x1"
+
+
+def test_design_space_enumeration_and_constraints():
+    w = resnet18()
+    space = DesignSpace(
+        workloads={"resnet18": w},
+        archs=EXPLORATION_ARCHITECTURES,
+        granularities=["layer", ("tile", 32, 1)],
+        ga=GAConfig(pop_size=4, generations=2),
+    )
+    assert space.size_unconstrained() == 7 * 2
+    assert len(space) == 14
+    constrained = DesignSpace(
+        workloads={"resnet18": w},
+        archs=EXPLORATION_ARCHITECTURES,
+        granularities=["layer"],
+        constraints=[max_cores(3)],   # single-core archs have 1 compute + simd
+    )
+    names = {p.arch.name for p in constrained}
+    assert names == {"SC:TPU", "SC:Eye", "SC:Env"}
+    none_left = DesignSpace(workloads={"resnet18": w},
+                            archs=EXPLORATION_ARCHITECTURES,
+                            constraints=[min_act_mem(1 << 30)])
+    assert len(none_left) == 0
+
+
+def test_point_content_key_sensitivity():
+    w = resnet18()
+    arch = ArchSpec.from_accelerator(mc_hetero())
+    base = dict(workload_name="resnet18", workload=w, arch=arch,
+                granularity=("tile", 32, 1))
+    p = DesignPoint(**base)
+    assert p.content_key() == DesignPoint(**base).content_key()
+    assert DesignPoint(**base, ga=GAConfig(seed=1)).content_key() \
+        != p.content_key()
+    assert DesignPoint(**{**base, "granularity": "layer"}).content_key() \
+        != p.content_key()
+
+
+def test_arch_mapping_keys_name_the_points():
+    """Two aliases of one catalog arch stay distinct points under the
+    declared names (the mapping key renames the spec)."""
+    from repro.hw.catalog import sc_tpu
+    space = DesignSpace(workloads=["resnet18"],
+                        archs={"baseline": sc_tpu, "variant": sc_tpu},
+                        granularities=["layer"])
+    points = list(space)
+    assert [p.arch.name for p in points] == ["baseline", "variant"]
+    assert len({p.content_key() for p in points}) == 2
+
+
+def test_workload_normalization_from_registry_names():
+    space = DesignSpace(workloads=["resnet18"], archs={"MC:Hetero": mc_hetero})
+    assert list(space.workloads) == ["resnet18"]
+    assert len(space.workloads["resnet18"]) > 10  # materialized Workload

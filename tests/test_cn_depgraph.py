@@ -11,6 +11,8 @@ from repro.core.depgraph import build_cn_graph
 from repro.core.workload import Workload
 from repro.configs.paper_workloads import resnet18, fsrcnn
 
+pytestmark = pytest.mark.tier1
+
 
 def _conv_net(oy=32, ox=32, k=8, c=3, f=3, stride=1):
     w = Workload("t")

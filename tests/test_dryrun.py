@@ -5,11 +5,11 @@ import jax
 import pytest
 
 from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import compat_make_mesh
 
 
 def _mesh(shape=(2, 4)):
-    return jax.make_mesh(shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh(shape, ("data", "model"))
 
 
 def test_lower_cell_train_reports_roofline():

@@ -17,6 +17,8 @@ from repro.core.allocator import feasible_cores_per_layer, manual_pingpong
 from repro.core.scheduler import ScheduleEngine, schedule, schedule_reference
 from repro.hw.catalog import diana, mc_hetero, mc_hom_tpu
 
+pytestmark = pytest.mark.tier1
+
 SETUPS = {
     # slug: (workload, accelerator, granularity) — squeezenet covers
     # multi-producer concats, diana covers comm_style == 'shared_mem'

@@ -8,6 +8,7 @@ import pytest
 
 from repro.configs import ARCHS, reduce_config
 from repro.models.module import init_from_specs
+from repro.launch.mesh import compat_make_mesh, compat_set_mesh
 from repro.models.zoo import (build_cache_specs, build_param_specs,
                               decode_step, prefill, train_loss)
 
@@ -17,8 +18,7 @@ MESH = None
 def mesh():
     global MESH
     if MESH is None:
-        MESH = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        MESH = compat_make_mesh((2, 4), ("data", "model"))
     return MESH
 
 
@@ -40,7 +40,7 @@ def test_arch_smoke_train_step(arch):
     cfg = reduce_config(ARCHS[arch])
     params = init_from_specs(build_param_specs(cfg), jax.random.PRNGKey(0))
     batch = _batch(cfg)
-    with jax.set_mesh(mesh()):
+    with compat_set_mesh(mesh()):
         loss = train_loss(cfg, params, batch, mesh=mesh(), remat=False)
     assert jnp.isfinite(loss) and 3.0 < float(loss) < 12.0
 
@@ -54,7 +54,7 @@ def test_arch_smoke_prefill_decode(arch):
     batch.pop("labels")
     caches = init_from_specs(build_cache_specs(cfg, B, S + 4),
                              jax.random.PRNGKey(1))
-    with jax.set_mesh(mesh()):
+    with compat_set_mesh(mesh()):
         logits, caches = prefill(cfg, params, batch, caches, mesh=mesh())
         enc_out = None
         if cfg.family == "encdec":
@@ -86,7 +86,7 @@ def test_prefill_then_decode_matches_full_forward(arch):
     key = jax.random.PRNGKey(3)
     toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
     m = mesh()
-    with jax.set_mesh(m):
+    with compat_set_mesh(m):
         # full forward over S+1 tokens -> logits at position S-1 and S
         from repro.models import transformer as tfm
         x, _, _ = tfm.decoder_forward(cfg, params, toks, mesh=m)
@@ -150,7 +150,7 @@ def test_moe_capacity_matches_dense_when_unconstrained():
     specs = moe_specs(16, 8, n_routed=8, n_shared=1, dtype=jnp.float32)
     params = init_from_specs(specs, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 16))
-    with jax.set_mesh(m):
+    with compat_set_mesh(m):
         out_cap, _ = moe_ffn(params, x, top_k=2, mesh=m, dp_axes=("data",),
                              impl="capacity", capacity_factor=8.0)
         out_rag, _ = moe_ffn(params, x, top_k=2, mesh=m, dp_axes=("data",),

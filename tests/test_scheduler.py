@@ -12,6 +12,8 @@ from repro.core.ga import GeneticAllocator, crowding_distance, \
 from repro.core.scheduler import schedule
 from repro.hw.catalog import mc_hetero, mc_hom_tpu, sc_tpu
 
+pytestmark = pytest.mark.tier1
+
 
 @pytest.fixture(scope="module")
 def r18_setup():

@@ -6,13 +6,13 @@ from repro.configs import ARCHS, reduce_config
 from repro.models.module import init_from_specs
 from repro.models.zoo import build_param_specs
 from repro.serve.engine import Request, ServeEngine
+from repro.launch.mesh import compat_make_mesh
 
 
 def test_engine_serves_batch_greedy():
     cfg = reduce_config(ARCHS["llama3.2-3b"])
     params = init_from_specs(build_param_specs(cfg), jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 2), ("data", "model"))
     engine = ServeEngine(cfg, params, mesh=mesh, batch_slots=2, max_len=48,
                          prompt_len=16)
     rng = np.random.default_rng(0)
@@ -27,8 +27,7 @@ def test_engine_serves_batch_greedy():
 def test_engine_determinism():
     cfg = reduce_config(ARCHS["llama3.2-3b"])
     params = init_from_specs(build_param_specs(cfg), jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     rng = np.random.default_rng(1)
     prompt = rng.integers(1, cfg.vocab, size=16)
     outs = []

@@ -13,13 +13,18 @@ from repro.models.zoo import build_param_specs
 from repro.train import checkpoint as ckpt
 from repro.train.data import DataConfig, TokenStream
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.launch.mesh import compat_make_mesh, compat_set_mesh
 from repro.train.train_step import (TrainStepConfig, compress_grads,
                                     init_train_state, make_train_step)
 
 
+_needs_zstandard = pytest.mark.skipif(
+    ckpt.zstandard is None,
+    reason="optional 'zstandard' not installed (checkpoint compression)")
+
+
 def _mesh(shape=(2, 4), names=("data", "model")):
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return compat_make_mesh(shape, names)
 
 
 def _tiny():
@@ -44,7 +49,7 @@ def test_train_loss_decreases():
     state = init_train_state(cfg, params, scfg)
     data = TokenStream(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
     losses = []
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         for i in range(25):
             batch = {k: jnp.asarray(v) for k, v in data.global_batch(i).items()}
             params, state, m = step(params, state, batch)
@@ -62,7 +67,7 @@ def test_microbatch_equivalence():
         scfg = TrainStepConfig(microbatches=mb, remat=False,
                                opt=AdamWConfig(lr=1e-3))
         step = make_train_step(cfg, mesh, scfg)
-        with jax.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             p2, _, m = step(jax.tree.map(jnp.copy, params),
                             init_train_state(cfg, params, scfg), batch)
         outs[mb] = (p2, float(m["loss"]))
@@ -102,6 +107,7 @@ def test_adamw_step_and_clip():
 # checkpointing
 # ---------------------------------------------------------------------------
 
+@_needs_zstandard
 def test_checkpoint_roundtrip_and_reshard(tmp_path):
     cfg, params = _tiny()
     tree = {"params": params, "step": jnp.int32(7)}
@@ -119,6 +125,7 @@ def test_checkpoint_roundtrip_and_reshard(tmp_path):
                                    np.asarray(b, np.float32))
 
 
+@_needs_zstandard
 def test_checkpoint_atomic_no_partial(tmp_path):
     cfg, params = _tiny()
     ckpt.save(str(tmp_path), 1, {"p": params})
@@ -147,6 +154,7 @@ def test_data_pipeline_deterministic_and_shardable():
 # fault tolerance
 # ---------------------------------------------------------------------------
 
+@_needs_zstandard
 def test_resume_or_init(tmp_path):
     from repro.train.fault_tolerance import resume_or_init
     tree = {"x": jnp.arange(4)}
@@ -188,11 +196,10 @@ def test_pipeline_loss_matches_reference():
     from repro.models.zoo import train_loss
     from repro.train.pipeline import make_pipeline_loss
     cfg = reduce_config(ARCHS["llama3.2-3b"], n_layers=4)
-    mesh = jax.make_mesh((2, 2), ("pipe", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 2), ("pipe", "data"))
     params = init_from_specs(build_param_specs(cfg), jax.random.PRNGKey(0))
     batch = _tiny_batch(cfg, B=4, S=32)
-    with jax.set_mesh(mesh):
+    with compat_set_mesh(mesh):
         ref = train_loss(cfg, params, batch, mesh=mesh, remat=False)
         p2 = dict(params)
         p2["layers"] = jax.tree.map(
