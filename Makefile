@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test tier1 bench bench-full
+.PHONY: test tier1 bench bench-quick bench-full
 
 # full suite (includes the jax model/train/serve substrate)
 test:
@@ -13,6 +13,10 @@ tier1:
 
 bench:
 	$(PY) -m benchmarks.run
+
+# the three scheduling benches (GA hot path) in quick mode
+bench-quick:
+	$(PY) -m benchmarks.run --only scheduler_throughput,ga_allocation,exploration
 
 bench-full:
 	$(PY) -m benchmarks.run --full

@@ -14,6 +14,7 @@ line granularity and a larger GA budget.
 """
 from __future__ import annotations
 
+import gc
 import time
 
 import numpy as np
@@ -40,6 +41,7 @@ def run(report=print, full: bool = False, seed: int = 0,
     report("== Figs. 13-15: layer-by-layer vs layer-fused EDP exploration ==")
     report(f"design space: {space!r}; executor: "
            + (f"process x{workers}" if workers else "serial"))
+    gc.collect()  # drop garbage inherited from earlier benches in the runner
     t00 = time.perf_counter()
     sweep = session.run(space, executor="process" if workers else "serial",
                         max_workers=workers or None)
@@ -77,9 +79,21 @@ def run(report=print, full: bool = False, seed: int = 0,
         points=len(sweep), scheduled=sweep.n_scheduled,
         from_store=sweep.n_from_store, wall_s=wall,
         points_per_sec=points_per_sec)
+    ck = session.checkpoint_stats()
+    ck_runs = ck["resume_hits"] + ck["cold_starts"]
+    ck_cns = ck["cns_skipped"] + ck["cns_scheduled"]
+    if ck_runs:  # with --workers, scheduling counters live in the workers
+        results[("sweep", "stats")].update(
+            checkpoint_resume_rate=ck["resume_hits"] / ck_runs,
+            checkpoint_cns_skipped_frac=ck["cns_skipped"] / max(ck_cns, 1))
+        ck_note = (f"; checkpoint resume rate "
+                   f"{ck['resume_hits'] / ck_runs:.0%}, "
+                   f"{ck['cns_skipped'] / max(ck_cns, 1):.0%} of CNs skipped")
+    else:
+        ck_note = ""
     report(f"total exploration time: {wall:.1f}s "
            f"({len(sweep)} points, {points_per_sec:.2f} points/s, "
-           f"{sweep.n_from_store} served from store)")
+           f"{sweep.n_from_store} served from store{ck_note})")
 
     # paper's structural claims (quick-mode tolerant):
     sc = [results[(a, "geomean")]["gain"] for a in ("SC:TPU", "SC:Eye", "SC:Env")]

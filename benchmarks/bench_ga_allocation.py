@@ -7,11 +7,15 @@ to expose the latency-memory trade-off.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.configs.paper_workloads import resnet18
+from repro.api import default_session
 from repro.core import CostModel, evaluate_allocation, explore
 from repro.core.allocator import manual_best_fit, manual_pingpong
+from repro.core.scheduler import ScheduleEngine
 from repro.hw.catalog import mc_hetero, mc_hom_tpu
 
 GRANULARITY = ("tile", 32, 1)
@@ -23,17 +27,29 @@ def run(report=print, full: bool = False, seed: int = 0) -> dict:
     report("== Fig. 12: GA vs manual layer-core allocation (ResNet-18) ==")
     report(f"{'arch':10s} {'allocation':16s} {'latency(cc)':>12s} {'energy(uJ)':>11s} "
            f"{'peak mem(KB)':>13s}")
+    evals = queries = hits = 0
+    ga_wall = 0.0
+    engines = []
     for arch_name, arch_fn in (("MC:HomTPU", mc_hom_tpu), ("MC:Hetero", mc_hetero)):
         acc = arch_fn()
         w = resnet18()
+        engine = default_session().engine(w, acc, GRANULARITY)
+        engine.reset_checkpoints()
+        engines.append(engine)
         manual = (manual_pingpong(w, acc) if arch_name == "MC:HomTPU"
                   else manual_best_fit(w, acc, CostModel(w, acc)))
         res_m = evaluate_allocation(w, acc, manual, granularity=GRANULARITY)
         rows = {"manual": res_m}
         for prio in ("latency", "memory"):
+            t0 = time.perf_counter()
             r = explore(w, acc, granularity=GRANULARITY, objective="edp",
                         priority=prio, pop_size=pop, generations=gens, seed=seed)
+            ga_wall += time.perf_counter() - t0
             rows[f"GA/{prio}-prio"] = r.schedule
+            if r.ga is not None:
+                evals += r.ga.evaluations
+                queries += r.ga.queries
+                hits += r.ga.cache_hits
         for label, r in rows.items():
             report(f"{arch_name:10s} {label:16s} {r.latency_cc:12.3e} "
                    f"{r.energy_pj / 1e6:11.1f} {r.peak_mem_bytes / 1024:13.1f}")
@@ -44,6 +60,26 @@ def run(report=print, full: bool = False, seed: int = 0) -> dict:
         report(f"{arch_name:10s} GA latency gain vs manual: "
                f"{man['latency'] / ga_lat['latency']:.2f}x, "
                f"energy gain: {man['energy'] / ga_lat['energy']:.2f}x")
+    # GA hot-path accounting: evaluations/sec, genome-memo hit rate, and the
+    # engines' segment-checkpoint reuse over all four GA runs above
+    ck = dict.fromkeys(ScheduleEngine.CKPT_COUNTERS, 0)
+    for engine in engines:
+        for k, v in engine.ckpt_stats.items():
+            ck[k] = ck.get(k, 0) + v
+    ck_total = ck["resume_hits"] + ck["cold_starts"]
+    ck_cns = ck["cns_skipped"] + ck["cns_scheduled"]
+    out["stats"] = {
+        "ga_wall_s": ga_wall,
+        "evaluations": evals,
+        "evaluations_per_sec": evals / max(ga_wall, 1e-9),
+        "fitness_cache_hit_rate": hits / max(queries, 1),
+        "checkpoint_resume_rate": ck["resume_hits"] / max(ck_total, 1),
+        "checkpoint_cns_skipped_frac": ck["cns_skipped"] / max(ck_cns, 1),
+    }
+    report(f"GA hot path: {out['stats']['evaluations_per_sec']:.0f} evals/s, "
+           f"fitness-cache hit rate {out['stats']['fitness_cache_hit_rate']:.0%}, "
+           f"checkpoint resume rate {out['stats']['checkpoint_resume_rate']:.0%} "
+           f"({out['stats']['checkpoint_cns_skipped_frac']:.0%} of CNs skipped)")
     return out
 
 

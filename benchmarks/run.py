@@ -66,7 +66,8 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench slugs/names (substring match)")
     ap.add_argument("--workers", type=int, default=0,
                     help="exploration sweep: process-executor worker count "
                          "(0 = in-process serial)")
@@ -76,8 +77,24 @@ def main() -> None:
 
     t00 = time.perf_counter()
     failures = []
+    only = [t.strip() for t in args.only.split(",") if t.strip()]
+    slugs = {b[0] for b in BENCHES}
+
+    def _selected(slug: str, name: str) -> bool:
+        if not only:
+            return True
+        for t in only:
+            if t == slug:
+                return True
+            # substring match, but a token naming an exact slug never
+            # spills onto other benches ('exploration' vs 'granularity
+            # co-exploration')
+            if t not in slugs and (t in name or t in slug):
+                return True
+        return False
+
     for slug, name, module, kwargs_of in BENCHES:
-        if args.only and args.only not in name and args.only not in slug:
+        if not _selected(slug, name):
             continue
         print(f"\n{'=' * 72}\n# {name}\n{'=' * 72}", flush=True)
         t0 = time.perf_counter()

@@ -72,7 +72,10 @@ class DesignPoint:
         return granularity_label(self.granularity)
 
     def _spec_blob(self) -> str:
-        return json.dumps({
+        blob = self.__dict__.get("_spec_blob_cache")
+        if blob is not None:
+            return blob
+        blob = json.dumps({
             "workload": self.workload_name,
             "workload_content": repr(self.workload.cache_key()),
             "arch": self.arch.to_dict(),
@@ -81,6 +84,8 @@ class DesignPoint:
             "priority": self.priority,
             "ga": dataclasses.asdict(self.ga),
         }, sort_keys=True)
+        object.__setattr__(self, "_spec_blob_cache", blob)  # frozen dataclass
+        return blob
 
     def spec_dict(self) -> dict:
         """Full specification in canonical JSON types (round-trip stable:

@@ -33,7 +33,7 @@ from repro.core.depgraph import CNGraph, build_cn_graph
 from repro.core.ga import GeneticAllocator
 from repro.core.scheduler import ScheduleEngine, ScheduleResult, get_engine
 from repro.core.stream_api import StreamResult, core_symmetry_cache_key, \
-    hw_min_tiles
+    core_symmetry_canonicalize, hw_min_tiles
 from repro.core.workload import Workload
 from repro.hw.accelerator import Accelerator
 
@@ -94,11 +94,12 @@ class FifoCache:
 
     _MISS = object()
 
-    def __init__(self, limit: int):
+    def __init__(self, limit: int, on_evict: Callable | None = None):
         self.limit = int(limit)
         self._data: dict = {}
         self.hits = 0
         self.misses = 0
+        self._on_evict = on_evict
 
     def get(self, key):
         value = self._data.get(key, self._MISS)
@@ -110,7 +111,9 @@ class FifoCache:
 
     def put(self, key, value) -> None:
         if key not in self._data and len(self._data) >= self.limit:
-            self._data.pop(next(iter(self._data)))
+            evicted = self._data.pop(next(iter(self._data)))
+            if self._on_evict is not None:
+                self._on_evict(evicted)
         self._data[key] = value
 
     def __len__(self) -> int:
@@ -123,6 +126,9 @@ class FifoCache:
         return self._data.keys()
 
     def clear(self) -> None:
+        if self._on_evict is not None:
+            for value in self._data.values():
+                self._on_evict(value)
         self._data.clear()
 
 
@@ -148,6 +154,7 @@ class ExplorationRecord:
     energy_breakdown: dict | None = None   # pj per component (mac/sram/...)
     spec: dict | None = None       # full point spec: result is reproducible
     from_store: bool = False       # True when served from the persistent store
+    ga_warm_starts: int = 0        # store-backed allocations seeding the GA
 
     def metric(self, name: str) -> float:
         return float(getattr(self, _OBJECTIVE_METRIC.get(name, name)))
@@ -255,6 +262,9 @@ class ResultStore:
 
     def __init__(self, cache_dir: str | None = None):
         self._records: dict[str, ExplorationRecord] = {}
+        # per-workload view of the same records (warm-start lookups are
+        # per workload; scanning the whole store per point is O(sweep^2))
+        self._by_workload: dict[str, dict[str, ExplorationRecord]] = {}
         self.path: str | None = None
         if cache_dir is not None:
             os.makedirs(cache_dir, exist_ok=True)
@@ -272,18 +282,24 @@ class ResultStore:
                             # drop it (the point just gets re-scheduled)
                             continue
                         self._records[rec.key] = rec
+                        self._by_workload.setdefault(rec.workload, {})[rec.key] = rec
 
     def get(self, key: str) -> ExplorationRecord | None:
         return self._records.get(key)
 
     def put(self, record: ExplorationRecord) -> None:
         self._records[record.key] = record
+        self._by_workload.setdefault(record.workload, {})[record.key] = record
         if self.path is not None:
             with open(self.path, "a") as f:
                 f.write(json.dumps(record.to_dict()) + "\n")
 
     def values(self) -> list[ExplorationRecord]:
         return list(self._records.values())
+
+    def for_workload(self, workload: str) -> list[ExplorationRecord]:
+        """Records of one workload (the warm-start candidate pool)."""
+        return list(self._by_workload.get(workload, {}).values())
 
     def __len__(self) -> int:
         return len(self._records)
@@ -299,11 +315,14 @@ class ResultStore:
 _WORKER_SESSION: "ExplorationSession | None" = None
 
 
-def _process_worker(point: DesignPoint) -> dict:
+def _process_worker(job: "tuple[DesignPoint, tuple]") -> dict:
     global _WORKER_SESSION
     if _WORKER_SESSION is None:
         _WORKER_SESSION = ExplorationSession()
-    return _WORKER_SESSION._compute_record(point).to_dict()
+    point, warm = job
+    return _WORKER_SESSION._compute_record(
+        point, initial_allocations=[np.array(a, dtype=np.int64)
+                                    for a in warm]).to_dict()
 
 
 class ExplorationSession:
@@ -311,11 +330,20 @@ class ExplorationSession:
     the executors that walk a `DesignSpace`."""
 
     def __init__(self, cache_dir: str | None = None, cache_limit: int = 32,
-                 max_workers: int | None = None):
+                 max_workers: int | None = None, warm_start: bool = False):
         self._graphs = FifoCache(cache_limit)
-        self._engines = FifoCache(cache_limit)
+        # evicted engines fold their checkpoint counters into a session
+        # total, so `checkpoint_stats()` covers the whole session lifetime
+        # and not just the engines still resident in the FIFO
+        self._ckpt_evicted: dict[str, int] = {}
+        self._engines = FifoCache(cache_limit, on_evict=self._fold_ckpt_stats)
         self.store = ResultStore(cache_dir)
         self.max_workers = max_workers
+        # warm_start seeds each point's GA from the best stored allocations
+        # of neighboring points. Off by default: warm-started results depend
+        # on store contents, so they are no longer a pure function of the
+        # point's content key (records carry `ga_warm_starts` for auditing).
+        self.warm_start = warm_start
 
     # ---- cache introspection --------------------------------------------
     @property
@@ -385,10 +413,18 @@ class ExplorationSession:
         feas = feasible_cores_per_layer(workload, accelerator)
 
         strict = granularity == "layer"  # traditional LBL: no overlap
+        canon = core_symmetry_canonicalize(accelerator)
 
-        def evaluate(genome: np.ndarray) -> tuple[float, float]:
-            # fitness only needs latency/energy: timing model without traces
-            return engine.evaluate(genome, priority, strict_layers=strict)
+        def evaluate_population(genomes: np.ndarray) -> np.ndarray:
+            # fitness only needs latency/energy: timing model without traces,
+            # resumed from the engine's shared segment-checkpoint store.
+            # Genomes are scheduled in canonical form (bit-identical by the
+            # identical-core symmetry backing the GA memo) so checkpoint
+            # prefixes are shared across each whole symmetry class.
+            if canon is not None:
+                genomes = np.stack([canon(g) for g in genomes])
+            return engine.evaluate_population(genomes, priority,
+                                              strict_layers=strict)
 
         scalarize = {
             "edp": lambda o: float(o[0] * o[1]),
@@ -400,11 +436,18 @@ class ExplorationSession:
             alloc = np.array([f[0] for f in feas])
             ga_res = None
         else:
+            # dedup=False: stored sweep records are content-keyed under the
+            # promise that identical specs reproduce identical metrics, and
+            # the pre-existing stores were built with clone-keeping NSGA
+            # selection — union dedup changes survivor sets whenever clones
+            # occur, which would silently invalidate every persisted record
             ga = GeneticAllocator(
-                n_genes=len(workload), feasible_cores=feas, evaluate=evaluate,
+                n_genes=len(workload), feasible_cores=feas,
+                evaluate_population=evaluate_population,
                 pop_size=pop_size, generations=generations,
                 scalarize=scalarize, seed=seed,
                 cache_key=core_symmetry_cache_key(accelerator),
+                dedup=False,
             )
             ga_res = ga.run(initial=initial_allocations)
             alloc = ga_res.best_genome
@@ -436,6 +479,43 @@ class ExplorationSession:
         return engine.schedule(np.asarray(allocation), priority,
                                strict_layers=(granularity == "layer"))
 
+    def evaluate_allocations(
+        self,
+        workload: Workload,
+        arch: "ArchSpec | Accelerator",
+        allocations,
+        granularity="line",
+        priority: str = "latency",
+    ) -> np.ndarray:
+        """(P, 2) [latency_cc, energy_pj] for a (P, G) allocation matrix.
+
+        The population-batched fitness path: one shared engine per
+        (graph, arch) pair, with segment-prefix checkpoints reused across
+        the whole batch (and across calls — the store lives on the engine)."""
+        engine = self.engine(workload, self._materialize(arch), granularity)
+        return engine.evaluate_population(
+            allocations, priority, strict_layers=(granularity == "layer"))
+
+    def _fold_ckpt_stats(self, entry) -> None:
+        _, engine = entry
+        for k, v in engine.ckpt_stats.items():
+            self._ckpt_evicted[k] = self._ckpt_evicted.get(k, 0) + v
+            # zero (keep the snapshot store): the engine may re-enter this
+            # cache via the graph-level engine cache — its future work must
+            # not re-count the folded history
+            engine.ckpt_stats[k] = 0
+
+    def checkpoint_stats(self) -> dict[str, int]:
+        """Segment-checkpoint counters over every engine this session built
+        (resident + evicted). Process-executor runs schedule inside worker
+        sessions, so their counters are not visible here."""
+        out = dict.fromkeys(ScheduleEngine.CKPT_COUNTERS, 0)
+        out.update(self._ckpt_evicted)
+        for _, engine in self._engines._data.values():
+            for k, v in engine.ckpt_stats.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
     def explore_granularity(
         self,
         workload: Workload,
@@ -453,13 +533,70 @@ class ExplorationSession:
         return GranularitySweep(results=results, objective=objective,
                                 best_label=best_label)
 
+    # ---- store-backed GA warm starts -------------------------------------
+    def warm_start_allocations(self, point: DesignPoint,
+                               limit: int = 4) -> list[np.ndarray]:
+        """Best stored allocations from neighboring points, to seed a GA.
+
+        Neighbors are records of the *same workload* whose allocation is
+        feasible on this point's architecture, ranked by architecture
+        similarity (same core count, per-slot matching core specs, same
+        granularity/priority) and then by their own objective value — the
+        ROADMAP's "nearby arch in the grid" without needing an explicit
+        grid: the spec distance is the grid distance. Returns at most
+        `limit` distinct allocations; empty when the store has no usable
+        neighbor (the GA then falls back to its random cold start)."""
+        workload = point.workload
+        n_layers = len(workload.layers)
+        accelerator = self._materialize(point.arch)
+        feas_sets = [set(f) for f in
+                     feasible_cores_per_layer(workload, accelerator)]
+        self_key = point.content_key()
+        target_arch = point.arch.to_dict()
+        target_cores = target_arch.get("cores", [])
+
+        def similarity(r: ExplorationRecord) -> int:
+            arch = (r.spec or {}).get("arch") or {}
+            cores = arch.get("cores", [])
+            s = 0
+            if len(cores) == len(target_cores):
+                s += 2
+                s += sum(1 for a, b in zip(cores, target_cores) if a == b)
+            if r.granularity == point.granularity_label:
+                s += 1
+            if r.priority == point.priority:
+                s += 1
+            return s
+
+        cands = []
+        for r in self.store.for_workload(point.workload_name):
+            if len(r.allocation) != n_layers or r.key == self_key:
+                continue
+            if any(core not in feas_sets[lid]
+                   for lid, core in enumerate(r.allocation)):
+                continue
+            cands.append(r)
+        cands.sort(key=lambda r: (-similarity(r), r.metric(point.objective),
+                                  r.key))
+        out: list[np.ndarray] = []
+        seen: set[tuple[int, ...]] = set()
+        for r in cands:
+            if r.allocation in seen:
+                continue
+            seen.add(r.allocation)
+            out.append(np.array(r.allocation, dtype=np.int64))
+            if len(out) >= limit:
+                break
+        return out
+
     # ---- sweep execution -------------------------------------------------
-    def _compute_record(self, point: DesignPoint) -> ExplorationRecord:
+    def _compute_record(self, point: DesignPoint,
+                        initial_allocations=()) -> ExplorationRecord:
         res = self.explore(
             point.workload, point.arch, granularity=point.granularity,
             objective=point.objective, priority=point.priority,
             pop_size=point.ga.pop_size, generations=point.ga.generations,
-            seed=point.ga.seed)
+            seed=point.ga.seed, initial_allocations=initial_allocations)
         return ExplorationRecord(
             key=point.content_key(), workload=point.workload_name,
             arch=point.arch.name, arch_key=point.arch.content_key(),
@@ -473,7 +610,8 @@ class ExplorationSession:
             runtime_s=res.runtime_s,
             energy_breakdown={k: float(v) for k, v in
                               res.schedule.energy_breakdown.items()},
-            spec=point.spec_dict())
+            spec=point.spec_dict(),
+            ga_warm_starts=len(initial_allocations))
 
     def run(
         self,
@@ -481,13 +619,21 @@ class ExplorationSession:
         executor: str = "serial",          # 'serial' | 'process'
         max_workers: int | None = None,
         progress: Callable[[ExplorationRecord], None] | None = None,
+        warm_start: bool | None = None,
     ) -> SweepResult:
         """Walk a design space; store hits are served without scheduling.
 
-        Both executors produce bit-identical metrics for every point (the
-        pipeline is deterministic at a fixed GA seed); 'process' fans the
-        *new* points out to worker processes that rebuild engines locally
-        from the picklable point specs."""
+        Without warm starts, both executors produce bit-identical metrics
+        for every point (the pipeline is deterministic at a fixed GA seed);
+        'process' fans the *new* points out to worker processes that rebuild
+        engines locally from the picklable point specs.
+
+        `warm_start` (default: the session's setting) seeds each point's GA
+        with the best stored allocations of neighboring points. The serial
+        executor looks neighbors up as points complete, so later points in
+        one sweep benefit from earlier ones; the process executor resolves
+        warm starts up-front from the pre-existing store (workers have no
+        store) and ships them with the point."""
         t0 = time.perf_counter()
         points = list(space)
         order: list[str] = []
@@ -514,18 +660,24 @@ class ExplorationSession:
             if progress is not None:
                 progress(rec)
 
+        warm = self.warm_start if warm_start is None else warm_start
         if executor == "serial":
             for p in todo:
-                _ingest(self._compute_record(p))
+                inits = self.warm_start_allocations(p) if warm else ()
+                _ingest(self._compute_record(p, initial_allocations=inits))
         elif executor == "process":
             workers = max_workers or self.max_workers or os.cpu_count() or 1
             if todo:
+                jobs = [(p, tuple(tuple(int(x) for x in a) for a in
+                                  (self.warm_start_allocations(p) if warm
+                                   else ())))
+                        for p in todo]
                 # spawn, not fork: callers routinely have jax (multithreaded)
                 # imported, and forking a threaded process can deadlock
                 ctx = multiprocessing.get_context("spawn")
                 with ProcessPoolExecutor(max_workers=workers,
                                          mp_context=ctx) as pool:
-                    for rec_dict in pool.map(_process_worker, todo):
+                    for rec_dict in pool.map(_process_worker, jobs):
                         _ingest(ExplorationRecord.from_dict(rec_dict))
         else:
             raise ValueError(f"unknown executor {executor!r} "

@@ -8,7 +8,8 @@ from repro.core.ga import GeneticAllocator, GAResult
 from repro.core.scheduler import (ScheduleEngine, ScheduleResult, schedule,
                                   schedule_reference)
 from repro.core.memtrace import trace, peak_memory
-from repro.core.stream_api import StreamResult, explore, evaluate_allocation, build_graph
+from repro.core.stream_api import StreamResult, explore, evaluate_allocation, \
+    evaluate_allocations, build_graph
 
 __all__ = [
     "Layer", "Workload", "CN", "identify_cns", "cns_by_layer",
@@ -16,5 +17,5 @@ __all__ = [
     "CostModel", "CostTables", "GeneticAllocator", "GAResult",
     "ScheduleEngine", "ScheduleResult", "schedule", "schedule_reference",
     "trace", "peak_memory", "StreamResult", "explore", "evaluate_allocation",
-    "build_graph",
+    "evaluate_allocations", "build_graph",
 ]

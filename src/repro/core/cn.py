@@ -81,9 +81,14 @@ class CN:
 
         Keyed on loop EXTENTS, not absolute ranges: the intra-core mapping
         cost only sees `stop - start` per dim, so e.g. all interior row-bands
-        of a layer collapse to one signature and are costed once.
+        of a layer collapse to one signature and are costed once. Memoized —
+        every engine build over a cached graph re-reads it per CN.
         """
-        return (self.layer, tuple(sorted((d, b - a) for d, a, b in self.out_rect.ranges)))
+        sig = getattr(self, "_sig", None)
+        if sig is None:
+            sig = self._sig = (self.layer, tuple(sorted(
+                (d, b - a) for d, a, b in self.out_rect.ranges)))
+        return sig
 
 
 def _split_ranges(extent: int, parts: int) -> list[tuple[int, int]]:

@@ -54,6 +54,10 @@ class CostModel:
         self.accelerator = accelerator
         self.cost_fn = cost_fn
         self._cache: dict[tuple, CNCost | None] = {}
+        # name-stripped cores for the global memo: the `name` label cannot
+        # enter any cost, so "tpu0".."tpu3" with equal specs share entries
+        self._core_content = [dataclasses.replace(c, name="")
+                              for c in accelerator.cores]
 
     def cn_dims(self, cn: CN) -> Mapping[str, int]:
         layer = self.workload.layers[cn.layer]
@@ -79,7 +83,8 @@ class CostModel:
             # results across CostModel instances (e.g. an architecture sweep
             # re-costing the same layers on identical core models)
             dims = self.cn_dims(cn)
-            gkey = (tuple(sorted(dims.items())), layer.op, core, layer.bits)
+            gkey = (tuple(sorted(dims.items())), layer.op,
+                    self._core_content[core_id], layer.bits)
             out = _GLOBAL_COST_CACHE.get(gkey, False)
             if out is False:
                 out = cn_cost(dims, layer.op, core, layer.bits)

@@ -101,6 +101,23 @@ class CNGraph:
                 for v in range(self.n)]
 
     @functools.cached_property
+    def pred_split(self) -> tuple[list[tuple[int, ...]],
+                                  list[tuple[tuple[int, int], ...]]]:
+        """`pred_pairs` split by edge kind: (ordering-only predecessors,
+        data-carrying (predecessor, bytes) pairs), both insertion-ordered.
+
+        Zero-byte edges only contribute their producer's finish time — the
+        scheduler's hot loop iterates them without unpacking byte weights or
+        re-testing `bytes == 0` per edge. Order within the data list is what
+        fixes the bus FCFS serving order; ordering edges commute (a max)."""
+        zero: list[tuple[int, ...]] = []
+        data: list[tuple[tuple[int, int], ...]] = []
+        for pairs in self.pred_pairs:
+            zero.append(tuple(u for u, b in pairs if b == 0))
+            data.append(tuple(p for p in pairs if p[1] != 0))
+        return zero, data
+
+    @functools.cached_property
     def succ_tuples(self) -> list[tuple[int, ...]]:
         ptr = self.succ_indptr.tolist()
         idx = self.succ_indices.tolist()

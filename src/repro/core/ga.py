@@ -6,8 +6,23 @@ per the paper: ordered (segment) crossover with p=0.3; mutation with p=0.7,
 choosing uniformly between a bit flip (re-allocate one unit to a different
 feasible core) and a position flip (swap two units' allocations). Selection
 is NSGA-II: fast non-dominated sorting + crowding distance, which spreads the
-surviving individuals over the Pareto front. Fitness values are memoized by
-genome bytes.
+surviving individuals over the Pareto front.
+
+The allocator is population-native: the population lives as a `(P, G)` int64
+matrix, fitness is requested through `evaluate_population(genomes) -> (P, M)`
+(a per-genome `evaluate` callable is accepted and adapted), cache keys are
+hashed for the whole batch at once, and only the cache-missing unique rows
+of each generation reach the evaluator — which can then exploit shared
+allocation prefixes across the batch (see `ScheduleEngine.
+evaluate_population`). The `pop + offspring` union is deduplicated by cache
+key before environmental selection, so identical genomes cannot inflate the
+fronts and waste crowding-distance slots on copies.
+
+Determinism contract: random draws are consumed genome-by-genome in the
+same order as the original scalar implementation, so a fixed `seed`
+reproduces the pre-vectorization evolution trajectory bit-for-bit (with
+`dedup=False`; deduplication intentionally changes survivor sets when
+clones occur).
 """
 from __future__ import annotations
 
@@ -69,7 +84,13 @@ class GAResult:
     best_genome: np.ndarray           # scalarized best (first objective product)
     best_objs: np.ndarray
     history: list[float]              # best scalarized fitness per generation
-    evaluations: int = 0
+    evaluations: int = 0              # unique genomes actually evaluated
+    queries: int = 0                  # fitness lookups incl. memo hits
+    cache_hits: int = 0               # queries served by the genome memo
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache_hits / self.queries if self.queries else 0.0
 
 
 class GeneticAllocator:
@@ -77,8 +98,9 @@ class GeneticAllocator:
         self,
         n_genes: int,
         feasible_cores: Sequence[Sequence[int]],   # per gene
-        evaluate: Callable[[np.ndarray], tuple[float, ...]],
+        evaluate: Callable[[np.ndarray], tuple[float, ...]] | None = None,
         *,
+        evaluate_population: Callable[[np.ndarray], np.ndarray] | None = None,
         pop_size: int = 32,
         generations: int = 24,
         crossover_p: float = 0.3,
@@ -87,12 +109,19 @@ class GeneticAllocator:
         seed: int = 0,
         patience: int = 8,
         cache_key: Callable[[np.ndarray], bytes] | None = None,
+        dedup: bool = True,
     ):
+        if evaluate is None and evaluate_population is None:
+            raise ValueError("pass evaluate= or evaluate_population=")
         self.n_genes = n_genes
         self.feasible = [np.asarray(f, dtype=np.int64) for f in feasible_cores]
         if any(f.size == 0 for f in self.feasible):
             raise ValueError("a gene has no feasible core")
         self.evaluate = evaluate
+        if evaluate_population is None:
+            evaluate_population = lambda M: np.array(  # noqa: E731
+                [tuple(float(x) for x in evaluate(g)) for g in M], dtype=float)
+        self.evaluate_population_fn = evaluate_population
         self.pop_size = max(4, pop_size)
         self.generations = generations
         self.crossover_p = crossover_p
@@ -104,83 +133,127 @@ class GeneticAllocator:
         # memo key; callers may pass a canonicalizer that maps genomes
         # equivalent under a fitness-preserving symmetry (e.g. permutations
         # of identical cores) to one key, deduplicating their evaluations
-        self.cache_key = cache_key or (lambda g: g.tobytes())
+        self.cache_key = cache_key
         self._cache: dict[bytes, tuple[float, ...]] = {}
         self.evaluations = 0
+        self.queries = 0
+        self.cache_hits = 0
+        self.dedup = dedup
 
-    # ---- operators ---------------------------------------------------------
+    # ---- batched genome hashing / fitness memo -----------------------------
+    def _keys(self, genomes: np.ndarray) -> list[bytes]:
+        """Cache key per row of a (K, G) genome matrix, hashed as one buffer
+        when no symmetry canonicalizer is installed."""
+        if self.cache_key is not None:
+            return [self.cache_key(g) for g in genomes]
+        buf = genomes.tobytes()
+        step = genomes.shape[1] * genomes.itemsize
+        return [buf[o:o + step] for o in range(0, len(buf), step)]
+
+    def _eval_population(self, genomes: np.ndarray,
+                         keys: list[bytes] | None = None) -> np.ndarray:
+        """(K, M) objectives for a (K, G) matrix; only cache-missing unique
+        rows reach the evaluator (as one batch, preserving first-seen order
+        so prefix-sharing evaluators see parents before their offspring)."""
+        if keys is None:
+            keys = self._keys(genomes)
+        cache = self._cache
+        self.queries += len(keys)
+        miss_rows: list[int] = []
+        miss_keys: list[bytes] = []
+        pending: set[bytes] = set()
+        for r, k in enumerate(keys):
+            if k not in cache and k not in pending:
+                pending.add(k)
+                miss_rows.append(r)
+                miss_keys.append(k)
+        self.cache_hits += len(keys) - len(miss_rows)
+        if miss_rows:
+            vals = np.asarray(
+                self.evaluate_population_fn(genomes[miss_rows]), dtype=float)
+            self.evaluations += len(miss_rows)
+            for k, row in zip(miss_keys, vals):
+                cache[k] = tuple(float(x) for x in row)
+        return np.array([cache[k] for k in keys], dtype=float)
+
+    def _eval(self, g: np.ndarray) -> tuple[float, ...]:
+        """Single-genome fitness through the same memo (compat shim)."""
+        g = np.ascontiguousarray(np.asarray(g, dtype=np.int64))
+        key = self._keys(g[None, :])[0]
+        self._eval_population(g[None, :], keys=[key])
+        return self._cache[key]
+
+    # ---- operators (legacy RNG draw order, matrix-row storage) -------------
     def _random_genome(self) -> np.ndarray:
         return np.array([f[self.rng.integers(f.size)] for f in self.feasible])
 
-    def _crossover(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
-        """Ordered (two-point segment) crossover on the allocation vector."""
-        child = a.copy()
-        i, j = sorted(self.rng.integers(0, self.n_genes, size=2))
-        child[i:j + 1] = b[i:j + 1]
-        return child
-
-    def _mutate(self, g: np.ndarray) -> np.ndarray:
-        g = g.copy()
-        if self.rng.random() < 0.5 or self.n_genes < 2:
+    def _mutate_inplace(self, g: np.ndarray) -> None:
+        rng = self.rng
+        if rng.random() < 0.5 or self.n_genes < 2:
             # bit flip: allocate one unit to a different feasible core
-            i = int(self.rng.integers(self.n_genes))
+            i = int(rng.integers(self.n_genes))
             opts = self.feasible[i]
             if opts.size > 1:
                 choices = opts[opts != g[i]]
-                g[i] = choices[self.rng.integers(choices.size)]
+                g[i] = choices[rng.integers(choices.size)]
         else:
             # position flip: swap two units' allocations (if mutually feasible)
-            i, j = self.rng.integers(0, self.n_genes, size=2)
+            i, j = rng.integers(0, self.n_genes, size=2)
             if g[j] in self.feasible[i] and g[i] in self.feasible[j]:
                 g[i], g[j] = g[j], g[i]
-        return g
-
-    def _eval(self, g: np.ndarray) -> tuple[float, ...]:
-        key = self.cache_key(g)
-        hit = self._cache.get(key)
-        if hit is None:
-            hit = tuple(float(x) for x in self.evaluate(g))
-            self._cache[key] = hit
-            self.evaluations += 1
-        return hit
 
     # ---- main loop ---------------------------------------------------------
     def run(self, initial: Sequence[np.ndarray] = ()) -> GAResult:
-        pop = [np.asarray(g) for g in initial][: self.pop_size]
-        while len(pop) < self.pop_size:
-            pop.append(self._random_genome())
-        objs = np.array([self._eval(g) for g in pop])
+        P, G = self.pop_size, self.n_genes
+        rows = [np.asarray(g, dtype=np.int64) for g in initial][:P]
+        while len(rows) < P:
+            rows.append(self._random_genome())
+        pop = np.ascontiguousarray(np.stack(rows).astype(np.int64, copy=False))
+        objs = self._eval_population(pop)
         history: list[float] = []
         stale = 0
+        rng = self.rng
         for _ in range(self.generations):
             # ---- variation: tournament parents -> offspring -----------------
             # scalarize once per generation, not once per tournament comparison
             scal = [self.scalarize(o) for o in objs]
-            offspring = []
-            while len(offspring) < self.pop_size:
-                i, j = self.rng.integers(0, len(pop), size=2)
-                parent = pop[i] if scal[i] <= scal[j] else pop[j]
-                child = parent.copy()
-                if self.rng.random() < self.crossover_p:
-                    mate = pop[int(self.rng.integers(len(pop)))]
-                    child = self._crossover(child, mate)
-                if self.rng.random() < self.mutation_p:
-                    child = self._mutate(child)
-                offspring.append(child)
+            len_pop = len(pop)
+            off = np.empty((P, G), dtype=np.int64)
+            for k in range(P):
+                i, j = rng.integers(0, len_pop, size=2)
+                child = pop[i if scal[i] <= scal[j] else j].copy()
+                if rng.random() < self.crossover_p:
+                    # ordered (two-point segment) crossover
+                    mate = pop[int(rng.integers(len_pop))]
+                    a, b = sorted(rng.integers(0, G, size=2))
+                    child[a:b + 1] = mate[a:b + 1]
+                if rng.random() < self.mutation_p:
+                    self._mutate_inplace(child)
+                off[k] = child
             # ---- NSGA-II environmental selection on parents+offspring -------
-            union = pop + offspring
-            uobjs = np.array([self._eval(g) for g in union])
+            union = np.ascontiguousarray(np.concatenate([pop, off]))
+            ukeys = self._keys(union)
+            uobjs = self._eval_population(union, keys=ukeys)
+            if self.dedup:
+                # clones of one genome would enter the sort as duplicate rows
+                # (same front, zero crowding distance) and eat survivor slots
+                seen: set[bytes] = set()
+                keep = [r for r, k in enumerate(ukeys)
+                        if not (k in seen or seen.add(k))]
+                if len(keep) < len(ukeys):
+                    union = union[keep]
+                    uobjs = uobjs[keep]
             fronts = fast_nondominated_sort(uobjs)
             survivors: list[int] = []
             for front in fronts:
-                if len(survivors) + front.size <= self.pop_size:
+                if len(survivors) + front.size <= P:
                     survivors.extend(front.tolist())
                 else:
                     cd = crowding_distance(uobjs[front])
                     order = front[np.argsort(-cd, kind="stable")]
-                    survivors.extend(order[: self.pop_size - len(survivors)].tolist())
+                    survivors.extend(order[: P - len(survivors)].tolist())
                     break
-            pop = [union[i] for i in survivors]
+            pop = np.ascontiguousarray(union[survivors])
             objs = uobjs[survivors]
             best = min(self.scalarize(o) for o in objs)
             if history and best >= history[-1] - 1e-12:
@@ -196,10 +269,12 @@ class GeneticAllocator:
         scal = np.array([self.scalarize(o) for o in objs])
         best_i = int(np.argmin(scal))
         return GAResult(
-            pareto_genomes=np.stack([pop[i] for i in pareto]),
-            pareto_objs=objs[pareto],
+            pareto_genomes=pop[pareto].copy(),
+            pareto_objs=objs[pareto].copy(),
             best_genome=pop[best_i].copy(),
             best_objs=objs[best_i].copy(),
             history=history,
             evaluations=self.evaluations,
+            queries=self.queries,
+            cache_hits=self.cache_hits,
         )

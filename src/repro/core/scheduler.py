@@ -26,6 +26,19 @@ Two implementations share these semantics bit-for-bit:
     the golden oracle for equivalence tests.
 `schedule()` keeps the seed's signature and dispatches to a `ScheduleEngine`
 cached on the graph.
+
+Incremental rescheduling (the GA fitness fast path): the event loop pops
+CNs in strict fused-stack order — a CN of segment s+1 can only pop once
+every segment-<=s CN is scheduled (predecessors never cross segments
+forward, so some segment-<=s CN is always ready while any remains).  The
+engine exploits this by snapshotting the complete loop state (core/bus/DRAM
+free times, finish array, weight-residency FIFOs, activation accounting,
+energy accumulators, ready set) at each segment barrier, keyed by the
+allocation prefix that determined it.  A later schedule whose allocation
+shares that prefix resumes from the deepest matching snapshot and replays
+only the differing suffix — GA offspring, which differ from their parents
+in one or two genes, pay only for the mutated tail.  Resumed schedules are
+bit-identical to cold ones (the snapshot *is* the cold state).
 """
 from __future__ import annotations
 
@@ -136,6 +149,11 @@ class ScheduleEngine:
     engine shared by every genome evaluation of a GA run.
     """
 
+    # the canonical checkpoint-counter set (ckpt_stats keys) — aggregators
+    # initialize from this instead of hand-duplicating the key list
+    CKPT_COUNTERS = ("resume_hits", "cold_starts", "snapshots",
+                     "cns_skipped", "cns_scheduled")
+
     def __init__(self, graph: CNGraph, cost_model: CostModel,
                  accelerator: Accelerator | None = None):
         acc = accelerator or cost_model.accelerator
@@ -147,15 +165,18 @@ class ScheduleEngine:
         self.tables = tables
 
         # per-CN x core cost rows: (cycles, e_compute, e_sram) or None when
-        # the core cannot run the CN — one index + unpack in the hot loop
-        cyc = tables.cycles[tables.sig_of_cn].tolist()
-        ecp = tables.e_compute[tables.sig_of_cn].tolist()
-        esr = tables.e_sram[tables.sig_of_cn].tolist()
-        feas = tables.feasible[tables.sig_of_cn].tolist()
-        self._cost_rows = [
-            [(cyc[i][c], ecp[i][c], esr[i][c]) if feas[i][c] else None
-             for c in range(acc.n_cores)]
-            for i in range(self.n)]
+        # the core cannot run the CN — one index + unpack in the hot loop.
+        # Rows are built once per unique signature and shared by every CN of
+        # that signature (n_sig << n).
+        cyc = tables.cycles.tolist()
+        ecp = tables.e_compute.tolist()
+        esr = tables.e_sram.tolist()
+        feas = tables.feasible.tolist()
+        sig_rows = [
+            tuple((cyc[s][c], ecp[s][c], esr[s][c]) if feas[s][c] else None
+                  for c in range(acc.n_cores))
+            for s in range(tables.n_signatures)]
+        self._cost_rows = [sig_rows[s] for s in tables.sig_of_cn.tolist()]
 
         # CSR adjacency unpacked to per-CN tuples: one index + unpack per
         # edge in the hot loop (insertion order preserved — bus FCFS order).
@@ -163,6 +184,7 @@ class ScheduleEngine:
         # same graph share them.
         hot = graph.hot_lists
         self._pred_pairs = graph.pred_pairs
+        self._pred_zero, self._pred_data = graph.pred_split
         self._succ_of = graph.succ_tuples
         self._indeg0 = hot["indeg"]
         self._zeros_n = [0] * self.n
@@ -181,6 +203,7 @@ class ScheduleEngine:
         self._weight_bytes = hot["weight_bytes"]
         self._new_in_bytes = hot["new_in_bytes"]
         self._disc_bytes = hot["disc_bytes"]
+        self._neg_layer = [-float(l) for l in self._layer_of]
 
         # workload / accelerator constants
         wl = cost_model.workload
@@ -197,17 +220,97 @@ class ScheduleEngine:
         else:
             self._act_cap0 = [float(c.act_mem_bytes) for c in acc.cores]
 
+        # ---- segment-prefix checkpointing ---------------------------------
+        # Valid only when CN ids are grouped by nondecreasing layer and no
+        # edge points to an earlier layer (both hold for every graph built by
+        # `build_cn_graph`; checked, not assumed) — then "all CNs of layers
+        # < L scheduled" is exactly "all CN ids < first_cn_of_layer[L]".
+        layer_sorted = bool(np.all(np.diff(graph.layer) >= 0)) if self.n else False
+        edges_forward = True
+        if graph.pred_indices.size:
+            cons_layer = np.repeat(graph.layer, np.diff(graph.pred_indptr))
+            edges_forward = bool(
+                np.all(graph.layer[graph.pred_indices] <= cons_layer))
+        self._ckpt_ok = layer_sorted and edges_forward and self.n > 0
+        self._first_cn_of_layer = (
+            np.searchsorted(graph.layer, np.arange(self.n_layers)).tolist()
+            if self._ckpt_ok else None)
+        self._strict_starts = list(range(self.n_layers))
+        self.checkpointing = True          # default for record=False schedules
+        self.ckpt_capacity = 512           # snapshots kept per engine (LRU)
+        # snapshot spacing: skip barriers closer than this many CNs to the
+        # previous snapshot, bounding per-schedule snapshot overhead while
+        # keeping resume granularity at ~1/16 of the network
+        self._ckpt_min_gap = max(1, self.n // 16)
+        self.ckpt_stats = dict.fromkeys(self.CKPT_COUNTERS, 0)
+        self._ckpt_store: OrderedDict[tuple, tuple] = OrderedDict()
+        self._seg_cache: dict[bytes, tuple[list[int], list[int]]] = {}
+
+    def reset_checkpoints(self) -> None:
+        """Drop stored snapshots and zero the hit/skip counters."""
+        self._ckpt_store.clear()
+        for k in self.ckpt_stats:
+            self.ckpt_stats[k] = 0
+
+    @property
+    def checkpoint_hit_rate(self) -> float:
+        """Fraction of record=False schedules resumed from a snapshot."""
+        tot = self.ckpt_stats["resume_hits"] + self.ckpt_stats["cold_starts"]
+        return self.ckpt_stats["resume_hits"] / tot if tot else 0.0
+
+    def _segment_views(self, seg_layer: np.ndarray) -> tuple[list[int], list[int]]:
+        """(per-CN segment ids, per-segment first layer) for one partition.
+
+        Partitions repeat heavily across genomes (they depend only on which
+        core each layer lands on relative to the weight capacities), so the
+        expanded per-CN list is memoized by partition content."""
+        key = seg_layer.tobytes()
+        hit = self._seg_cache.get(key)
+        if hit is None:
+            seg_of = seg_layer[self._layer_arr].tolist()
+            n_seg = int(seg_layer[-1]) + 1 if seg_layer.size else 1
+            starts = np.searchsorted(seg_layer, np.arange(n_seg)).tolist()
+            if len(self._seg_cache) >= 64:
+                self._seg_cache.pop(next(iter(self._seg_cache)))
+            hit = self._seg_cache[key] = (seg_of, starts)
+        return hit
+
     def evaluate(self, allocation: Sequence[int], priority: str = "latency",
-                 segment: bool = True, strict_layers: bool = False) -> tuple[float, float]:
+                 segment: bool = True, strict_layers: bool = False,
+                 checkpoint: bool | None = None) -> tuple[float, float]:
         """(latency_cc, energy_pj) of one allocation — the GA fitness fast
-        path: runs the timing model without trace recording."""
+        path: runs the timing model without trace recording, resuming from
+        the deepest matching segment checkpoint."""
         res = self.schedule(allocation, priority, segment=segment,
-                            strict_layers=strict_layers, record=False)
+                            strict_layers=strict_layers, record=False,
+                            checkpoint=checkpoint)
         return (res.latency_cc, res.energy_pj)
+
+    def evaluate_population(self, genomes, priority: str = "latency",
+                            segment: bool = True, strict_layers: bool = False,
+                            checkpoint: bool | None = None) -> np.ndarray:
+        """Fitness of a whole (P, G) genome matrix -> (P, 2) [latency, energy].
+
+        The population-batched entry point of the GA hot path: one row per
+        genome, scheduled against the shared checkpoint store so genomes
+        sharing allocation prefixes (parents and their offspring) replay
+        only their differing suffixes."""
+        genomes = np.asarray(genomes, dtype=np.int64)
+        if genomes.ndim == 1:
+            genomes = genomes[None, :]
+        out = np.empty((genomes.shape[0], 2), dtype=np.float64)
+        for r in range(genomes.shape[0]):
+            res = self.schedule(genomes[r], priority, segment=segment,
+                                strict_layers=strict_layers, record=False,
+                                checkpoint=checkpoint)
+            out[r, 0] = res.latency_cc
+            out[r, 1] = res.energy_pj
+        return out
 
     def schedule(self, allocation: Sequence[int], priority: str = "latency",
                  segment: bool = True, strict_layers: bool = False,
-                 record: bool = True) -> ScheduleResult:
+                 record: bool = True,
+                 checkpoint: bool | None = None) -> ScheduleResult:
         """Run the event loop for one layer-core allocation.
 
         `record=False` skips the observational traces (memory events, core/
@@ -215,6 +318,12 @@ class ScheduleEngine:
         overflow spills feed back into DRAM-port timing, so latency/energy
         are identical; `peak_mem_bytes`/`act_peak_bytes` come back as NaN.
         Use it for GA genome evaluations that only read latency/energy.
+
+        `checkpoint` (record=False only; default = the engine's
+        `checkpointing` flag) snapshots the loop state at every fused-stack
+        barrier keyed by the allocation prefix, and resumes this schedule
+        from the deepest stored snapshot whose prefix matches — the result
+        is bit-identical to a cold run.
         """
         if priority not in ("latency", "memory"):
             raise ValueError(f"unknown priority {priority!r}")
@@ -225,17 +334,21 @@ class ScheduleEngine:
         alloc_l = alloc.tolist()
         if strict_layers:
             seg_of = self._layer_of          # seg id == layer id per CN
-        elif segment:
+            seg_starts = self._strict_starts
+            mode, incl = 2, 0                # cut at every layer: key excludes
+        elif segment:                        # the entered segment's first gene
             seg_of_layer = _segments_from_arrays(alloc_l, self._layer_wb, self._w_cap)
-            seg_of = seg_of_layer[self._layer_arr].tolist()
-        else:
+            seg_of, seg_starts = self._segment_views(seg_of_layer)
+            mode, incl = 1, 1                # cut placement depends on the
+        else:                                # first gene: key includes it
             seg_of = self._zeros_n           # single fused stack
+            seg_starts = [0]
+            mode, incl = 0, 0
         core_of = alloc[self._layer_arr].tolist()
-        seg_barrier: dict[int, float] = {0: 0.0}
-        frontier = 0.0  # max finish time over everything scheduled so far
 
         # local bindings for the hot loop
-        pred_pairs, succ_of = self._pred_pairs, self._succ_of
+        pred_zero, pred_data = self._pred_zero, self._pred_data
+        succ_of = self._succ_of
         layer_of = self._layer_of
         out_bytes, weight_bytes = self._out_bytes, self._weight_bytes
         new_in_bytes, disc_bytes = self._new_in_bytes, self._disc_bytes
@@ -243,25 +356,88 @@ class ScheduleEngine:
         external_of = self._external_of
         w_cap, is_aimc, shared_l1 = self._w_cap, self._is_aimc, self._shared_l1
         heappush, heappop = heapq.heappush, heapq.heappop
+        heap_code = self._heap_code
+        code_mask = self._code_mask
+        by_memory = priority == "memory"
 
-        core_free = [0.0] * n_cores
-        core_busy = [0.0] * n_cores
-        bus_free = 0.0
-        dram_free = 0.0
-        finish = [0.0] * n
+        # ---- checkpoint lookup: deepest stored prefix of this allocation ----
+        use_ckpt = (not record) and self._ckpt_ok and (
+            self.checkpointing if checkpoint is None else checkpoint)
+        snap = None
+        ab = b""
+        store = self._ckpt_store
+        pkey = (by_memory, mode)
+        if use_ckpt:
+            ab = alloc.tobytes()
+            for s in range(len(seg_starts) - 1, 0, -1):
+                key = (pkey, ab[: 8 * (seg_starts[s] + incl)])
+                snap = store.get(key)
+                if snap is not None:
+                    store.move_to_end(key)
+                    break
 
         act_cap = self._act_cap0
-        act_used = [0.0] * n_cores
-        resident: list[OrderedDict[int, int]] = [OrderedDict() for _ in range(n_cores)]
-        resident_used = [0.0] * n_cores
+        if snap is None:
+            if use_ckpt:
+                self.ckpt_stats["cold_starts"] += 1
+            core_free = [0.0] * n_cores
+            core_busy = [0.0] * n_cores
+            bus_free = 0.0
+            dram_free = 0.0
+            finish = [0.0] * n
+            act_used = [0.0] * n_cores
+            resident: list[OrderedDict[int, int]] = [OrderedDict() for _ in range(n_cores)]
+            resident_used = [0.0] * n_cores
+            # fresh-byte bookkeeping: a producer CN's output is shipped to a
+            # given core at most once (consumers on that core share the
+            # data); keys are packed cn * n_cores + core — int-keyed dicts
+            # hash faster and are invisible to the cyclic GC once snapshotted
+            sent_to: dict[int, float] = {}       # cn/core -> arrival time
+            remaining_new: dict[int, int] = {}   # cn -> bytes left to ship
+            spilled: dict[int, float] = {}       # cn -> bytes pushed to DRAM
+            have_spills = False
+            e_compute = e_sram = e_bus = e_dram = 0.0
+            comm_max = 0.0
+            dram_max = 0.0
+            seg_barrier: dict[int, float] = {0: 0.0}
+            frontier = 0.0  # max finish over everything scheduled so far
+            indeg = self._indeg0.copy()
+            ready_key = [0.0] * n
+            keysrc = self._neg_layer if by_memory else ready_key
+            heap: list[tuple[int, float, int]] = []
+            for i in range(n):
+                if indeg[i] == 0:
+                    heappush(heap, (seg_of[i], keysrc[i], heap_code[i]))
+            scheduled = 0
+            cur_seg = 0
+        else:
+            (k0, fin_p, indeg_s, rk_s, s_core_free, s_core_busy, s_act_used,
+             s_res_used, s_resident, s_sent, s_rem, s_spill, have_spills,
+             bus_free, dram_free, frontier, e_compute, e_sram, e_bus, e_dram,
+             comm_max, dram_max, s_barrier, ready_ids) = snap
+            self.ckpt_stats["resume_hits"] += 1
+            self.ckpt_stats["cns_skipped"] += k0
+            core_free = list(s_core_free)
+            core_busy = list(s_core_busy)
+            act_used = list(s_act_used)
+            resident_used = list(s_res_used)
+            resident = [OrderedDict(r) for r in s_resident]
+            sent_to = dict(s_sent)
+            remaining_new = dict(s_rem)
+            spilled = dict(s_spill)
+            finish = list(fin_p) + [0.0] * (n - k0)
+            indeg = [0] * k0 + list(indeg_s)
+            ready_key = [0.0] * k0 + list(rk_s)
+            keysrc = self._neg_layer if by_memory else ready_key
+            seg_barrier = dict(s_barrier)
+            scheduled = k0
+            # rebuild the heap with this allocation's segment ids (the ready
+            # set and its priority keys are prefix state; the seg ids of
+            # not-yet-scheduled CNs are not, so they are recomputed here)
+            heap = [(seg_of[v], keysrc[v], heap_code[v]) for v in ready_ids]
+            heapq.heapify(heap)
+            cur_seg = -1  # first pop re-enters the resumed segment's barrier
 
-        # fresh-byte bookkeeping: a producer CN's output is shipped to a given
-        # core at most once (consumers on that core share the landed data)
-        sent_to: dict[tuple[int, int], float] = {}  # (cn, core) -> arrival time
-        remaining_new: dict[int, int] = {}          # cn -> bytes left to ship
-        spilled: dict[int, float] = {}              # cn -> bytes pushed to DRAM
-
-        e_compute = e_sram = e_bus = e_dram = 0.0
         # flat event buffers: (time, +/- bytes, core, kind-code)
         ev_t: list[float] = []
         ev_d: list[float] = []
@@ -270,8 +446,6 @@ class ScheduleEngine:
         core_intervals: list[list[tuple[float, float, int]]] = [[] for _ in range(n_cores)]
         comm_intervals: list[tuple[float, float, int, int, int]] = []
         dram_intervals: list[tuple[float, float, str, int]] = []
-        comm_max = 0.0
-        dram_max = 0.0
 
         bus_bw = acc.bus_bw_bits_per_cc
         dram_bw = acc.dram_bw_bits_per_cc
@@ -294,31 +468,53 @@ class ScheduleEngine:
                 dram_max = end
             return end
 
-        # ---- candidate pool -------------------------------------------------
+        # ---- event loop -----------------------------------------------------
         # heap key: (segment, priority key, layer, intra rank, cn) — fused
         # stacks execute in order, so the segment id is the primary key. The
         # 'latency' priority key (max finish over predecessors) is maintained
         # incrementally by the successor loop instead of re-scanning preds.
-        indeg = self._indeg0.copy()
-        heap_code = self._heap_code
-        code_mask = self._code_mask
-        heap: list[tuple[int, float, int]] = []
-        by_memory = priority == "memory"
-        ready_key = [0.0] * n
-        have_spills = False
-
-        for i in range(n):
-            if indeg[i] == 0:
-                key = -float(layer_of[i]) if by_memory else 0.0
-                heappush(heap, (seg_of[i], key, heap_code[i]))
-
-        scheduled = 0
+        first_cn = self._first_cn_of_layer
+        min_gap = self._ckpt_min_gap
+        n_resumed = scheduled
+        last_snap_k = scheduled   # resume point / run start counts as spaced
+        cur_barrier = seg_barrier.get(cur_seg, 0.0)
         while heap:
-            i = heappop(heap)[2] & code_mask
+            seg, _pk, code = heappop(heap)
+            i = code & code_mask
             core = core_of[i]
-            seg = seg_of[i]
-            if seg not in seg_barrier:
-                seg_barrier[seg] = frontier  # stack barrier: previous stack done
+            if seg != cur_seg:
+                # segment barrier: every CN of previous segments is scheduled
+                if use_ckpt and seg > 0:
+                    lay0 = seg_starts[seg]
+                    k0 = first_cn[lay0]
+                    if k0 - last_snap_k >= min_gap:
+                        last_snap_k = k0
+                        key = (pkey, ab[: 8 * (lay0 + incl)])
+                        if key not in store:
+                            ready = [e[2] & code_mask for e in heap]
+                            ready.append(i)
+                            # tuples, not lists: scalar-only tuples (and
+                            # scalar dicts) get *untracked* by the cyclic GC,
+                            # so a full snapshot store does not make every
+                            # collection traverse thousands of containers
+                            store[key] = (
+                                k0, tuple(finish[:k0]), tuple(indeg[k0:]),
+                                tuple(ready_key[k0:]), tuple(core_free),
+                                tuple(core_busy), tuple(act_used),
+                                tuple(resident_used),
+                                tuple(dict(r) for r in resident),
+                                dict(sent_to), dict(remaining_new),
+                                dict(spilled), have_spills, bus_free,
+                                dram_free, frontier, e_compute, e_sram, e_bus,
+                                e_dram, comm_max, dram_max, dict(seg_barrier),
+                                tuple(ready))
+                            self.ckpt_stats["snapshots"] += 1
+                            if len(store) > self.ckpt_capacity:
+                                store.popitem(last=False)
+                cur_seg = seg
+                cur_barrier = seg_barrier.get(seg)
+                if cur_barrier is None:
+                    cur_barrier = seg_barrier[seg] = frontier  # prev stack done
             cost = cost_rows[i][core]
             if cost is None:
                 raise ValueError(
@@ -326,16 +522,22 @@ class ScheduleEngine:
             cyc, e_cn_comp, e_cn_sram = cost
 
             # ---- incoming data: communication + spill readback --------------
+            # ordering-only predecessors: just a finish max (no bus, and no
+            # spill share either — a zero-byte edge reads back zero bytes)
             data_ready = 0.0
-            for u, e_bytes in pred_pairs[i]:
-                if e_bytes == 0 or shared_l1 or (u_core := core_of[u]) == core:
-                    # same core, pure ordering edge, or shared-L1 architecture
-                    # (DIANA-style): both cores address one copy, no transfer
+            for u in pred_zero[i]:
+                fu = finish[u]
+                if fu > data_ready:
+                    data_ready = fu
+            for u, e_bytes in pred_data[i]:
+                if shared_l1 or (u_core := core_of[u]) == core:
+                    # same core or shared-L1 architecture (DIANA-style):
+                    # both cores address one copy, no transfer node
                     fu = finish[u]
                     if fu > data_ready:
                         data_ready = fu
                 else:
-                    skey = (u, core)
+                    skey = u * n_cores + core
                     arrived = sent_to.get(skey)
                     if arrived is not None:
                         if arrived > data_ready:
@@ -423,10 +625,13 @@ class ScheduleEngine:
             wb = weight_bytes[i]
             if wb > 0:
                 cap = w_cap[core]
-                hold = min(wb, cap) if cap > 0 else 0
-                res = resident[core]
                 lid = layer_of[i]
+                res = resident[core]
                 if lid not in res:
+                    if cap > 0:
+                        hold = wb if wb < cap else cap
+                    else:
+                        hold = 0
                     evicted_bytes = 0
                     while resident_used[core] + hold > cap and res:
                         _, evicted = res.popitem(last=False)  # FIFO
@@ -434,15 +639,25 @@ class ScheduleEngine:
                         evicted_bytes += evicted
                     res[lid] = hold
                     resident_used[core] += hold
-                    kind = "weight" if wb <= cap else "weight_stream"
-                    weight_ready = dram_xfer(wb, kind, 0.0)
-                    # weights occupy on-chip SRAM (AiMC weights live in-array)
-                    if record and not is_aimc[core] and hold > 0:
-                        ev_t.append(weight_ready); ev_d.append(float(hold))
-                        ev_c.append(core); ev_k.append(_KIND_WEIGHT)
-                        if evicted_bytes:
-                            ev_t.append(weight_ready); ev_d.append(-float(evicted_bytes))
+                    # inlined dram_xfer (earliest=0: the port is never idle
+                    # backwards) — the hottest off-chip access site
+                    d_start = dram_free
+                    weight_ready = dram_free = d_start + wb * 8.0 / dram_bw
+                    e_dram += wb * 8.0 * dram_e_bit
+                    if weight_ready > dram_max:
+                        dram_max = weight_ready
+                    if record:
+                        kind = "weight" if wb <= cap else "weight_stream"
+                        dram_intervals.append(
+                            (d_start, weight_ready, kind, int(wb)))
+                        # weights occupy on-chip SRAM (AiMC weights in-array)
+                        if not is_aimc[core] and hold > 0:
+                            ev_t.append(weight_ready); ev_d.append(float(hold))
                             ev_c.append(core); ev_k.append(_KIND_WEIGHT)
+                            if evicted_bytes:
+                                ev_t.append(weight_ready)
+                                ev_d.append(-float(evicted_bytes))
+                                ev_c.append(core); ev_k.append(_KIND_WEIGHT)
 
             # ---- execute ----------------------------------------------------
             start = core_free[core]
@@ -450,9 +665,8 @@ class ScheduleEngine:
                 start = data_ready
             if weight_ready > start:
                 start = weight_ready
-            barrier = seg_barrier[seg]
-            if barrier > start:
-                start = barrier
+            if cur_barrier > start:
+                start = cur_barrier
             end = start + cyc
             core_free[core] = end
             core_busy[core] += cyc
@@ -498,11 +712,12 @@ class ScheduleEngine:
                 d = indeg[v] - 1
                 indeg[v] = d
                 if d == 0:
-                    key = -float(layer_of[v]) if by_memory else ready_key[v]
-                    heappush(heap, (seg_of[v], key, heap_code[v]))
+                    heappush(heap, (seg_of[v], keysrc[v], heap_code[v]))
 
         if scheduled != n:
             raise RuntimeError(f"scheduled {scheduled}/{n} CNs: dependency cycle?")
+        if use_ckpt:
+            self.ckpt_stats["cns_scheduled"] += n - n_resumed
 
         latency = max(frontier if n else 0.0, comm_max, dram_max)
         energy = {"compute": e_compute, "sram": e_sram, "bus": e_bus, "dram": e_dram}

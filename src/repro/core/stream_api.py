@@ -26,28 +26,37 @@ from repro.core.workload import Workload
 from repro.hw.accelerator import Accelerator
 
 
-def core_symmetry_cache_key(accelerator: Accelerator):
-    """Genome-memo canonicalizer exploiting identical-core symmetry.
+def core_symmetry_canonicalize(accelerator: Accelerator):
+    """Canonical-form function exploiting identical-core symmetry.
 
     On a homogeneous multi-core, relabeling the identical cores of an
-    allocation cannot change the schedule's latency/energy (cost tables,
-    bus and DRAM ports are label-invariant), so genomes equivalent under
-    such permutations share one GA cache entry. Cores are canonicalized to
-    their group's member ids in order of first appearance. Returns None when
-    every core is unique (no symmetry to exploit)."""
+    allocation cannot change the schedule's latency/energy bit-for-bit: the
+    cost tables, weight/activation capacities and AiMC flags of equal cores
+    are equal, the bus and DRAM ports are shared, and the event loop touches
+    core ids only through those per-core arrays — a permutation of identical
+    cores permutes the loop state exactly. Cores are canonicalized to their
+    group's member ids in order of first appearance, which is *prefix-
+    stable*: the canonical form of a genome prefix depends only on that
+    prefix, so GA offspring share canonical allocation prefixes with their
+    parents and the scheduler's segment checkpoints hit across the whole
+    symmetry class. Returns None when every core is unique.
+
+    Cores are grouped by their *content* — the `name` label cannot affect
+    any cost or capacity, so "tpu0" and "tpu1" with equal specs are one
+    group."""
     groups: dict = {}
     for i, c in enumerate(accelerator.cores):
-        groups.setdefault(c, []).append(i)
+        groups.setdefault(dataclasses.replace(c, name=""), []).append(i)
     sym = {i: tuple(members) for members in
            (m for m in groups.values() if len(m) > 1) for i in members}
     if not sym:
         return None
 
-    def key(genome) -> bytes:
+    def canonicalize(genome) -> np.ndarray:
         remap: dict[int, int] = {}
         next_slot: dict[tuple, int] = {}
-        out = bytearray()
-        for g in genome:
+        out = np.empty(len(genome), dtype=np.int64)
+        for idx, g in enumerate(genome):
             g = int(g)
             members = sym.get(g)
             if members is not None:
@@ -58,10 +67,21 @@ def core_symmetry_cache_key(accelerator: Accelerator):
                     next_slot[members] = k + 1
                     remap[g] = m
                 g = m
-            out.append(g)
-        return bytes(out)
+            out[idx] = g
+        return out
 
-    return key
+    return canonicalize
+
+
+def core_symmetry_cache_key(accelerator: Accelerator):
+    """Genome-memo key: byte string of the canonical form (see
+    `core_symmetry_canonicalize`), so genomes equivalent under identical-core
+    permutations share one GA cache entry. Returns None when every core is
+    unique (no symmetry to exploit)."""
+    canon = core_symmetry_canonicalize(accelerator)
+    if canon is None:
+        return None
+    return lambda genome: canon(genome).tobytes()
 
 
 def hw_min_tiles(accelerator: Accelerator) -> dict[str, int]:
@@ -130,6 +150,21 @@ def evaluate_allocation(
     return _session().evaluate_allocation(
         workload, accelerator, allocation, granularity=granularity,
         priority=priority, graph=graph, engine=engine)
+
+
+def evaluate_allocations(
+    workload: Workload,
+    accelerator: Accelerator,
+    allocations,
+    granularity="line",
+    priority: str = "latency",
+) -> np.ndarray:
+    """Population-batched fitness: (P, G) allocation matrix -> (P, 2)
+    [latency_cc, energy_pj], scheduled through one shared engine whose
+    segment-prefix checkpoints are reused across the whole batch."""
+    return _session().evaluate_allocations(
+        workload, accelerator, allocations, granularity=granularity,
+        priority=priority)
 
 
 def explore(

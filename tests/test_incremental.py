@@ -1,0 +1,332 @@
+"""Population-batched GA + segment-checkpointed incremental rescheduling.
+
+Covers the equivalence and determinism contract of the batched hot path:
+  * checkpoint-resumed schedules are bit-identical to cold engine runs and
+    to the `schedule_reference` golden oracle, across both priorities and a
+    single-core + heterogeneous architecture;
+  * `evaluate_population` matches per-genome `evaluate`;
+  * the vectorized `GeneticAllocator` reproduces identical `GAResult`
+    history for a fixed seed (and, with dedup off, the legacy scalar
+    trajectory recorded before vectorization);
+  * union dedup removes clone rows before NSGA-II selection;
+  * store-backed warm starts seed the GA from neighboring points' best
+    allocations and fall back to cold starts on an empty store.
+"""
+import numpy as np
+import pytest
+
+from repro.api import DesignSpace, ExplorationSession, GAConfig
+from repro.configs.paper_workloads import fsrcnn, resnet18, tiny_yolo
+from repro.core import CostModel, build_graph
+from repro.core.allocator import feasible_cores_per_layer, manual_pingpong
+from repro.core.ga import GeneticAllocator
+from repro.core.scheduler import ScheduleEngine, schedule_reference
+from repro.core.stream_api import core_symmetry_canonicalize, \
+    evaluate_allocations
+from repro.hw.catalog import mc_hetero, mc_hom_tpu, sc_tpu
+
+pytestmark = pytest.mark.tier1
+
+SETUPS = {
+    "r18-hetero": (resnet18, mc_hetero, ("tile", 16, 1)),
+    "yolo-single-core": (tiny_yolo, sc_tpu, ("tile", 16, 1)),
+}
+
+
+@pytest.fixture(scope="module", params=sorted(SETUPS))
+def setup(request):
+    wl_fn, acc_fn, gran = SETUPS[request.param]
+    w, acc = wl_fn(), acc_fn()
+    graph = build_graph(w, acc, gran)
+    cm = CostModel(w, acc)
+    return w, acc, graph, cm, ScheduleEngine(graph, cm, acc)
+
+
+def _mutation_stream(w, acc, n=12, seed=0):
+    feas = feasible_cores_per_layer(w, acc)
+    rng = np.random.default_rng(seed)
+    pool = [manual_pingpong(w, acc)]
+    for _ in range(n):
+        a = pool[rng.integers(len(pool))].copy()
+        i = rng.integers(len(a))
+        a[i] = feas[i][rng.integers(len(feas[i]))]
+        pool.append(a)
+    return pool
+
+
+@pytest.mark.parametrize("priority", ["latency", "memory"])
+@pytest.mark.parametrize("mode", ["segmented", "strict_layers"])
+def test_checkpoint_resume_matches_reference_and_cold(setup, priority, mode):
+    w, acc, graph, cm, engine = setup
+    kw = {} if mode == "segmented" else {"strict_layers": True}
+    engine.reset_checkpoints()
+    for alloc in _mutation_stream(w, acc):
+        inc = engine.evaluate(alloc, priority, checkpoint=True, **kw)
+        cold = engine.evaluate(alloc, priority, checkpoint=False, **kw)
+        ref = schedule_reference(graph, cm, alloc, acc, priority, **kw)
+        assert inc == cold == (ref.latency_cc, ref.energy_pj)
+    if acc.n_cores > 1 and mode == "segmented":
+        assert engine.ckpt_stats["snapshots"] > 0
+
+
+def test_resumed_schedule_is_bit_identical_not_approximate(setup):
+    """Same allocation evaluated again resumes from its deepest snapshot
+    and must return the exact same floats."""
+    w, acc, graph, cm, engine = setup
+    alloc = manual_pingpong(w, acc)
+    engine.reset_checkpoints()
+    first = engine.evaluate(alloc, checkpoint=True)
+    again = engine.evaluate(alloc, checkpoint=True)
+    assert first == again
+
+
+def test_evaluate_population_matches_scalar(setup):
+    w, acc, graph, cm, engine = setup
+    genomes = np.stack(_mutation_stream(w, acc, n=6, seed=3))
+    batched = engine.evaluate_population(genomes, "latency")
+    for row, g in zip(batched, genomes):
+        assert tuple(row) == engine.evaluate(g, "latency")
+
+
+def test_evaluate_allocations_api(setup):
+    w, acc, graph, cm, engine = setup
+    genomes = np.stack(_mutation_stream(w, acc, n=3, seed=7))
+    out = evaluate_allocations(w, acc, genomes, granularity=("tile", 16, 1))
+    assert out.shape == (len(genomes), 2)
+    assert np.all(out > 0)
+
+
+def test_canonical_form_is_fitness_preserving_and_prefix_stable():
+    w, acc = resnet18(), mc_hom_tpu()
+    canon = core_symmetry_canonicalize(acc)
+    assert canon is not None  # 4 equal digital cores differ only by name
+    graph = build_graph(w, acc, ("tile", 16, 1))
+    engine = ScheduleEngine(graph, CostModel(w, acc), acc)
+    for alloc in _mutation_stream(w, acc, n=4, seed=5):
+        c = canon(alloc)
+        assert engine.evaluate(alloc, checkpoint=False) == \
+            engine.evaluate(c, checkpoint=False)
+        # prefix-stability: canonical form of a prefix == prefix of the form
+        k = len(alloc) // 2
+        assert np.array_equal(canon(alloc[:k]), c[:k])
+
+
+# ---------------------------------------------------------------------------
+# vectorized GA
+# ---------------------------------------------------------------------------
+
+def _toy_eval():
+    target = np.array([0, 1, 2, 0, 1, 2, 0, 1, 2, 0, 1, 2])
+
+    def evaluate(g):
+        return (float(np.sum(g != target)) + 1.0, float(np.sum(g)) + 1.0)
+
+    return evaluate
+
+
+def test_ga_identical_history_for_fixed_seed():
+    feas = [[0, 1, 2]] * 12
+    results = [GeneticAllocator(12, feas, _toy_eval(), pop_size=10,
+                                generations=12, seed=11).run()
+               for _ in range(2)]
+    a, b = results
+    assert a.history == b.history
+    assert np.array_equal(a.best_genome, b.best_genome)
+    assert np.array_equal(a.pareto_genomes, b.pareto_genomes)
+    assert a.evaluations == b.evaluations
+
+
+def _legacy_scalar_ga(feas, evaluate, pop_size, generations, seed):
+    """Minimal re-statement of the pre-vectorization GeneticAllocator.run
+    (scalar genomes, no dedup) used as the trajectory oracle."""
+    import numpy as _np
+
+    rng = _np.random.default_rng(seed)
+    feasible = [_np.asarray(f) for f in feas]
+    cache, evals = {}, [0]
+
+    def ev(g):
+        k = g.tobytes()
+        if k not in cache:
+            cache[k] = tuple(float(x) for x in evaluate(g))
+            evals[0] += 1
+        return cache[k]
+
+    def rand_g():
+        return _np.array([f[rng.integers(f.size)] for f in feasible])
+
+    def mutate(g):
+        g = g.copy()
+        if rng.random() < 0.5 or len(g) < 2:
+            i = int(rng.integers(len(g)))
+            opts = feasible[i]
+            if opts.size > 1:
+                choices = opts[opts != g[i]]
+                g[i] = choices[rng.integers(choices.size)]
+        else:
+            i, j = rng.integers(0, len(g), size=2)
+            if g[j] in feasible[i] and g[i] in feasible[j]:
+                g[i], g[j] = g[j], g[i]
+        return g
+
+    from repro.core.ga import crowding_distance, fast_nondominated_sort
+    scalarize = lambda o: float(_np.prod(o))  # noqa: E731
+    pop = []
+    while len(pop) < pop_size:
+        pop.append(rand_g())
+    objs = _np.array([ev(g) for g in pop])
+    history, stale = [], 0
+    for _ in range(generations):
+        scal = [scalarize(o) for o in objs]
+        offspring = []
+        while len(offspring) < pop_size:
+            i, j = rng.integers(0, len(pop), size=2)
+            child = (pop[i] if scal[i] <= scal[j] else pop[j]).copy()
+            if rng.random() < 0.3:
+                mate = pop[int(rng.integers(len(pop)))]
+                a, b = sorted(rng.integers(0, len(child), size=2))
+                c2 = child.copy()
+                c2[a:b + 1] = mate[a:b + 1]
+                child = c2
+            if rng.random() < 0.7:
+                child = mutate(child)
+            offspring.append(child)
+        union = pop + offspring
+        uobjs = _np.array([ev(g) for g in union])
+        fronts = fast_nondominated_sort(uobjs)
+        survivors = []
+        for front in fronts:
+            if len(survivors) + front.size <= pop_size:
+                survivors.extend(front.tolist())
+            else:
+                cd = crowding_distance(uobjs[front])
+                order = front[_np.argsort(-cd, kind="stable")]
+                survivors.extend(order[: pop_size - len(survivors)].tolist())
+                break
+        pop = [union[i] for i in survivors]
+        objs = uobjs[survivors]
+        best = min(scalarize(o) for o in objs)
+        if history and best >= history[-1] - 1e-12:
+            stale += 1
+        else:
+            stale = 0
+        history.append(best)
+        if stale >= 8:
+            break
+    return history, evals[0]
+
+
+def test_ga_matches_legacy_scalar_trajectory():
+    feas = [[0, 1, 2]] * 12
+    for seed in (0, 11):
+        legacy_history, legacy_evals = _legacy_scalar_ga(
+            feas, _toy_eval(), pop_size=10, generations=12, seed=seed)
+        res = GeneticAllocator(12, feas, _toy_eval(), pop_size=10,
+                               generations=12, seed=seed, dedup=False).run()
+        assert res.history == legacy_history
+        assert res.evaluations == legacy_evals
+
+
+def test_ga_dedup_removes_clone_rows():
+    """With mutation off and crossover rare, offspring are mostly clones of
+    their parents; dedup must keep the fronts clone-free."""
+    evaluate = lambda g: (float(np.sum(g)) + 1.0,  # noqa: E731
+                          float(np.sum(g == 0)) + 1.0)
+    ga = GeneticAllocator(6, [[0, 1]] * 6, evaluate, pop_size=8,
+                          generations=6, seed=2, crossover_p=0.05,
+                          mutation_p=0.0, dedup=True)
+    res = ga.run()
+    keys = {row.tobytes() for row in res.pareto_genomes}
+    assert len(keys) == len(res.pareto_genomes)
+
+
+def test_ga_batched_evaluator_sees_only_cache_misses():
+    calls = []
+
+    def eval_pop(genomes):
+        calls.append(len(genomes))
+        return np.array([(float(np.sum(g)) + 1.0, 1.0) for g in genomes])
+
+    ga = GeneticAllocator(8, [[0, 1]] * 8, evaluate_population=eval_pop,
+                          pop_size=8, generations=4, seed=0)
+    res = ga.run()
+    assert sum(calls) == res.evaluations       # only unique rows evaluated
+    assert res.queries > res.evaluations       # clones served by the memo
+    assert res.cache_hits == res.queries - res.evaluations
+
+
+# ---------------------------------------------------------------------------
+# store-backed warm starts
+# ---------------------------------------------------------------------------
+
+def _tiny_space(session, ga=None):
+    return DesignSpace(
+        workloads={"fsrcnn": fsrcnn()},
+        archs={"MC:HomTPU": mc_hom_tpu()},
+        granularities=[("tile", 8, 1)],
+        ga=ga or GAConfig(pop_size=6, generations=2, seed=0),
+    )
+
+
+def test_warm_start_allocations_empty_store_falls_back():
+    session = ExplorationSession()
+    point = next(iter(_tiny_space(session)))
+    assert session.warm_start_allocations(point) == []
+
+
+def test_warm_start_allocations_from_neighbor_arch():
+    session = ExplorationSession()
+    w = fsrcnn()
+    space = DesignSpace(workloads={"fsrcnn": w},
+                        archs={"MC:HomTPU": mc_hom_tpu()},
+                        granularities=[("tile", 8, 1)],
+                        ga=GAConfig(pop_size=6, generations=2, seed=0))
+    session.run(space)
+    # a *different* arch for the same workload: the stored neighbor's best
+    # allocation must seed it (feasible: both are 4 digital cores + simd)
+    other = DesignSpace(workloads={"fsrcnn": w},
+                        archs={"MC:Hetero": mc_hetero()},
+                        granularities=[("tile", 8, 1)],
+                        ga=GAConfig(pop_size=6, generations=2, seed=0))
+    point = next(iter(other))
+    warm = session.warm_start_allocations(point)
+    stored = session.store.values()[0]
+    assert any(tuple(int(x) for x in a) == stored.allocation for a in warm)
+    # the identical point is a store hit, never a warm start
+    same_point = next(iter(space))
+    assert session.warm_start_allocations(same_point) == []
+
+
+def test_warm_started_sweep_records_the_seeding():
+    session = ExplorationSession(warm_start=True)
+    w = resnet18()
+    a1 = DesignSpace(workloads={"resnet18": w}, archs={"MC:HomTPU": mc_hom_tpu()},
+                     granularities=[("tile", 8, 1)],
+                     ga=GAConfig(pop_size=6, generations=2, seed=0))
+    r1 = session.run(a1)
+    assert r1.records[0].ga_warm_starts == 0          # store was empty
+    a2 = DesignSpace(workloads={"resnet18": w}, archs={"MC:Hetero": mc_hetero()},
+                     granularities=[("tile", 8, 1)],
+                     ga=GAConfig(pop_size=6, generations=2, seed=0))
+    r2 = session.run(a2)
+    assert r2.records[0].ga_warm_starts >= 1          # seeded from neighbor
+    # warm starts never break determinism bookkeeping: re-running the same
+    # space is a pure store hit
+    again = session.run(a2)
+    assert again.n_from_store == 1 and again.n_scheduled == 0
+
+
+def test_checkpoint_store_shared_across_session_explorations():
+    session = ExplorationSession()
+    w, acc = resnet18(), mc_hom_tpu()
+    engine = session.engine(w, acc, ("tile", 16, 1))
+    engine.reset_checkpoints()
+    session.explore(w, acc, granularity=("tile", 16, 1),
+                    pop_size=6, generations=2, seed=0)
+    snaps_after_first = engine.ckpt_stats["snapshots"]
+    assert snaps_after_first > 0
+    session.explore(w, acc, granularity=("tile", 16, 1),
+                    pop_size=6, generations=2, seed=1)
+    # second exploration reuses the same engine and store
+    assert session.engine(w, acc, ("tile", 16, 1)) is engine
+    assert engine.ckpt_stats["resume_hits"] > 0
