@@ -1,15 +1,24 @@
 PY := PYTHONPATH=src python
 
-.PHONY: test tier1 bench bench-quick bench-full
+.PHONY: all test tier1 docs bench bench-quick bench-full
+
+# default flow: the full suite plus the docs gate (link check + doctests)
+all: test docs
 
 # full suite (includes the jax model/train/serve substrate)
 test:
 	$(PY) -m pytest -q
 
 # fast core Stream suite: engine golden equivalence, CN dependency graph,
-# scheduler invariants, exploration session + archspec (~seconds, no jax)
+# scheduler invariants, topology model, exploration session + archspec
+# (~seconds, no jax)
 tier1:
 	$(PY) -m pytest -q -m tier1
+
+# markdown link check over README/ROADMAP/docs/ + executable docstring
+# examples (doctest) of the public API surface
+docs:
+	$(PY) tools/check_docs.py
 
 bench:
 	$(PY) -m benchmarks.run

@@ -1,0 +1,92 @@
+"""Chiplet-partition sweep: the ROADMAP's topology axis on the quad-core
+iso-area architectures.
+
+Sweeps 1/2/4-chiplet ring partitions of the quad-core MC:HomTPU and the
+2-chiplet partition of MC:Hetero against their flat single-die baselines
+(UCIe-class links: 64 bit/cc, 0.4 pJ/bit vs the 128 bit/cc @ 0.08 pJ/bit
+on-die bus), GA-allocated at fused granularity.  Reports per-cell
+EDP/latency/energy, the EDP cost of each partition vs its flat baseline,
+and asserts the degenerate-case contract inline: the 1-chiplet partition
+must reproduce the flat architecture's metrics bit-for-bit.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.api import DesignSpace, ExplorationSession, GAConfig
+from repro.configs.paper_workloads import EXPLORATION_WORKLOADS
+from repro.hw.catalog import mc_hetero, mc_hom_tpu, with_chiplets
+
+FINE_GRANULARITY = ("tile", 32, 1)
+WORKLOADS = ("resnet18", "squeezenet")
+
+
+def run(report=print, full: bool = False, seed: int = 0,
+        workers: int = 0, cache_dir: str | None = None) -> dict:
+    pop, gens = (24, 16) if full else (10, 6)
+    fine = "line" if full else FINE_GRANULARITY
+    hom, het = mc_hom_tpu(), mc_hetero()
+    archs = {
+        "MC:HomTPU": hom,
+        "MC:HomTPU-chip1": with_chiplets(hom, 1),
+        "MC:HomTPU-chip2": with_chiplets(hom, 2),
+        "MC:HomTPU-chip4": with_chiplets(hom, 4),
+        "MC:Hetero": het,
+        "MC:Hetero-chip2": with_chiplets(het, 2),
+    }
+    space = DesignSpace(
+        workloads={k: EXPLORATION_WORKLOADS[k] for k in WORKLOADS},
+        archs=archs,
+        granularities=[fine],
+        ga=GAConfig(pop_size=pop, generations=gens, seed=seed),
+    )
+    session = ExplorationSession(cache_dir=cache_dir)
+    report("== chiplet partitions: 1/2/4-way splits vs flat single die ==")
+    report(f"design space: {space!r}; executor: "
+           + (f"process x{workers}" if workers else "serial"))
+    t00 = time.perf_counter()
+    sweep = session.run(space, executor="process" if workers else "serial",
+                        max_workers=workers or None)
+    wall = time.perf_counter() - t00
+
+    by_cell = {(r.arch, r.workload): r for r in sweep.records}
+    results: dict[tuple, dict] = {}
+    report(f"{'arch':18s} {'network':12s} {'EDP':>11s} {'vs flat':>8s} "
+           f"{'latency':>10s} {'E(uJ)':>8s} {'bus(uJ)':>8s}")
+    for arch_name in archs:
+        flat_name = arch_name.split("-chip")[0]
+        for wl_name in WORKLOADS:
+            r = by_cell[(arch_name, wl_name)]
+            flat = by_cell[(flat_name, wl_name)]
+            rel = r.edp / max(flat.edp, 1e-30)
+            results[(arch_name, wl_name)] = dict(
+                edp=r.edp, latency_cc=r.latency_cc, energy_pj=r.energy_pj,
+                bus_pj=r.energy_breakdown["bus"], edp_vs_flat=rel)
+            report(f"{arch_name:18s} {wl_name:12s} {r.edp:11.3e} {rel:7.2f}x "
+                   f"{r.latency_cc:10.3e} {r.energy_pj / 1e6:8.1f} "
+                   f"{r.energy_breakdown['bus'] / 1e6:8.2f}")
+
+    # degenerate-case contract: a single-cluster topology is the flat
+    # architecture, bit for bit (same GA trajectory, same schedule)
+    for wl_name in WORKLOADS:
+        flat, chip1 = by_cell[("MC:HomTPU", wl_name)], \
+            by_cell[("MC:HomTPU-chip1", wl_name)]
+        assert (chip1.edp, chip1.latency_cc, chip1.energy_pj) == \
+            (flat.edp, flat.latency_cc, flat.energy_pj), \
+            f"chip1 != flat on {wl_name}"
+        assert chip1.allocation == flat.allocation, wl_name
+    report("degenerate-case check: 1-chiplet partition == flat, bit-identical")
+
+    points_per_sec = len(sweep) / max(wall, 1e-9)
+    results[("sweep", "stats")] = dict(
+        points=len(sweep), scheduled=sweep.n_scheduled,
+        from_store=sweep.n_from_store, wall_s=wall,
+        points_per_sec=points_per_sec)
+    report(f"total: {wall:.1f}s ({len(sweep)} points, "
+           f"{points_per_sec:.2f} points/s)")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

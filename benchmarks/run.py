@@ -52,6 +52,9 @@ BENCHES = [
     ("exploration", "exploration (paper Figs. 13-15)",
      "benchmarks.bench_exploration",
      lambda a: {"full": a.full, "workers": a.workers}),
+    ("exploration_chiplets", "exploration: chiplet partitions (topology axis)",
+     "benchmarks.bench_exploration_chiplets",
+     lambda a: {"full": a.full, "workers": a.workers}),
     ("kernels", "kernels (Pallas blocks)",
      "benchmarks.bench_kernels", lambda a: {}),
     ("pipeline_plan", "pipeline planner (beyond-paper)",

@@ -2,24 +2,34 @@
 
     from repro.api import ArchSpec, DesignSpace, ExplorationSession
 
-`ArchSpec` declares hardware as data, `DesignSpace` declares the sweep as a
-constrained cross-product, and `ExplorationSession` executes it (serial or
-multi-process) against a persistent content-keyed result store.  The legacy
-one-call API (`repro.core.explore`) is a thin wrapper over a default session.
+`ArchSpec` declares hardware as data — including chiplet topologies
+(`TopologySpec`: core clusters, inter-cluster links, hop tables) —
+`DesignSpace` declares the sweep as a constrained cross-product, and
+`ExplorationSession` executes it (serial or multi-process) against a
+persistent content-keyed result store.  The legacy one-call API
+(`repro.core.explore`) is a thin wrapper over a default session.
+
+`DEFAULT_GRANULARITIES` (re-exported from `repro.api.session`) is the
+granularity axis used by `ExplorationSession.explore_granularity` when none
+is given: whole layers plus 8/16/32/64 row-band tilings.
 """
 from repro.api.archspec import ArchSpec, CoreSpec, as_arch_spec, catalog_specs
 from repro.api.designspace import DesignPoint, DesignSpace, GAConfig, \
-    fits_weights_on_chip, granularity_label, max_cores, min_act_mem
+    fits_weights_on_chip, granularity_label, max_clusters, max_cores, \
+    min_act_mem
 from repro.api.session import (DEFAULT_GRANULARITIES, ExplorationRecord,
                                ExplorationSession, FifoCache,
                                GranularitySweep, ResultStore, SweepResult,
                                best_record, default_session, pareto_records,
                                pivot_records)
+from repro.hw.topology import (ClusterSpec, LinkSpec, TopologySpec,
+                               partition_topology)
 
 __all__ = [
     "ArchSpec", "CoreSpec", "as_arch_spec", "catalog_specs",
+    "TopologySpec", "ClusterSpec", "LinkSpec", "partition_topology",
     "DesignPoint", "DesignSpace", "GAConfig", "granularity_label",
-    "min_act_mem", "max_cores", "fits_weights_on_chip",
+    "min_act_mem", "max_cores", "max_clusters", "fits_weights_on_chip",
     "ExplorationSession", "ExplorationRecord", "SweepResult",
     "GranularitySweep", "ResultStore", "FifoCache", "DEFAULT_GRANULARITIES",
     "best_record", "pareto_records", "pivot_records", "default_session",

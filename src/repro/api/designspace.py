@@ -24,7 +24,13 @@ from repro.api.archspec import ArchSpec, as_arch_spec
 from repro.core.workload import Workload
 
 def granularity_label(granularity) -> str:
-    """Canonical short label ('layer', 'line', 'tile32x1', 'per-layer[...]')."""
+    """Canonical short label ('layer', 'line', 'tile32x1', 'per-layer[...]').
+
+        >>> granularity_label(("tile", 32, 1))
+        'tile32x1'
+        >>> granularity_label({0: "layer", 1: ("tile", 8)})
+        'per-layer[0:layer,1:tile8x1]'
+    """
     if isinstance(granularity, str):
         return granularity
     if isinstance(granularity, tuple) and granularity and granularity[0] == "tile":
@@ -48,7 +54,14 @@ def _granularity_jsonable(granularity):
 
 @dataclasses.dataclass(frozen=True)
 class GAConfig:
-    """Budget/seed of the genetic layer-core allocator for one point."""
+    """Budget/seed of the genetic layer-core allocator for one point.
+
+    Part of every `DesignPoint`'s content key: changing the GA budget or
+    seed is a different experiment with its own stored record.
+
+        >>> GAConfig(pop_size=8, generations=4).seed
+        0
+    """
 
     pop_size: int = 24
     generations: int = 16
@@ -57,7 +70,23 @@ class GAConfig:
 
 @dataclasses.dataclass(frozen=True)
 class DesignPoint:
-    """One fully specified exploration: everything `explore()` needs."""
+    """One fully specified exploration: everything `explore()` needs.
+
+    Pure data (picklable, JSON-serializable); `content_key()` is the
+    identity of the *result* — identical keys mean identical metrics,
+    which is what makes the `ResultStore` reusable across runs.
+
+        >>> from repro.configs.paper_workloads import squeezenet
+        >>> from repro.api.archspec import as_arch_spec
+        >>> from repro.hw.catalog import mc_hetero
+        >>> p = DesignPoint(workload_name="squeezenet", workload=squeezenet(),
+        ...                 arch=as_arch_spec(mc_hetero()),
+        ...                 granularity=("tile", 32, 1))
+        >>> p.granularity_label
+        'tile32x1'
+        >>> len(p.content_key())
+        24
+    """
 
     workload_name: str
     workload: Workload
@@ -103,20 +132,61 @@ Constraint = Callable[[DesignPoint], bool]
 
 
 def min_act_mem(n_bytes: int) -> Constraint:
-    """Keep architectures with at least `n_bytes` of on-chip activation mem."""
+    """Keep architectures with at least `n_bytes` of on-chip activation mem.
+
+        >>> from repro.hw.catalog import EXPLORATION_ARCHITECTURES
+        >>> space = DesignSpace(workloads=["squeezenet"],
+        ...                     archs=EXPLORATION_ARCHITECTURES,
+        ...                     constraints=[min_act_mem(1 << 30)])
+        >>> len(space)                  # nothing has 1 GiB of SRAM
+        0
+    """
     def ok(p: DesignPoint) -> bool:
         return p.arch.total_act_mem_bytes() >= n_bytes
     return ok
 
 
 def max_cores(n: int) -> Constraint:
+    """Keep architectures with at most `n` cores (SIMD helpers included).
+
+        >>> from repro.hw.catalog import EXPLORATION_ARCHITECTURES
+        >>> space = DesignSpace(workloads=["squeezenet"],
+        ...                     archs=EXPLORATION_ARCHITECTURES,
+        ...                     granularities=["layer"],
+        ...                     constraints=[max_cores(3)])
+        >>> sorted(p.arch.name for p in space)   # 1 compute core + SIMD
+        ['SC:Env', 'SC:Eye', 'SC:TPU']
+    """
     def ok(p: DesignPoint) -> bool:
         return p.arch.n_cores <= n
     return ok
 
 
+def max_clusters(n: int) -> Constraint:
+    """Keep architectures with at most `n` chiplets/clusters (flat
+    single-die specs count as 1) — the topology axis of a chiplet sweep.
+
+        >>> from repro.api.archspec import ArchSpec, as_arch_spec
+        >>> from repro.hw.catalog import mc_hom_tpu
+        >>> spec = as_arch_spec(mc_hom_tpu()).with_chiplets(4)
+        >>> spec.n_clusters
+        4
+    """
+    def ok(p: DesignPoint) -> bool:
+        return p.arch.n_clusters <= n
+    return ok
+
+
 def fits_weights_on_chip() -> Constraint:
-    """Total weight SRAM must hold the workload's weights (no DRAM refetch)."""
+    """Total weight SRAM must hold the workload's weights (no DRAM refetch).
+
+        >>> from repro.hw.catalog import EXPLORATION_ARCHITECTURES
+        >>> space = DesignSpace(workloads=["squeezenet"],   # 1.2 MB weights
+        ...                     archs=EXPLORATION_ARCHITECTURES,
+        ...                     constraints=[fits_weights_on_chip()])
+        >>> len(space)                  # iso-area archs carry 0.5 MB
+        0
+    """
     def ok(p: DesignPoint) -> bool:
         wmem = sum(c.weight_mem_bytes for c in p.arch.cores)
         return wmem >= p.workload.total_weight_bytes
@@ -175,11 +245,22 @@ def _normalize_archs(archs) -> dict[str, ArchSpec]:
 class DesignSpace:
     """The declared cross-product; iterating yields constraint-filtered points.
 
-    >>> space = DesignSpace(workloads=["resnet18"],
-    ...                     archs=EXPLORATION_ARCHITECTURES,
-    ...                     granularities=["layer", ("tile", 32, 1)],
-    ...                     constraints=[max_cores(5)])
-    >>> len(space), next(iter(space))
+    Workloads may be registry names, `Workload`s, or factories; archs may be
+    `ArchSpec`s, `Accelerator`s, factories, or a name-keyed mapping (the
+    keys rename the specs).  Constraints prune on the *specs* while
+    enumerating, before any CN graph is built.
+
+        >>> from repro.hw.catalog import EXPLORATION_ARCHITECTURES
+        >>> space = DesignSpace(workloads=["squeezenet"],
+        ...                     archs=EXPLORATION_ARCHITECTURES,
+        ...                     granularities=["layer", ("tile", 32, 1)],
+        ...                     constraints=[max_cores(5)])
+        >>> space.size_unconstrained()
+        14
+        >>> len(space)                  # MC:* archs have 5 cores: all pass
+        14
+        >>> next(iter(space)).granularity_label
+        'layer'
     """
 
     def __init__(

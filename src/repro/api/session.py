@@ -90,7 +90,13 @@ class FifoCache:
     refresh an entry's position (this is FIFO, not LRU), which keeps the
     eviction order independent of access patterns and therefore
     deterministic across executors.  Hit/miss counters are exposed for the
-    session's `cache_stats`."""
+    session's `cache_stats`.
+
+        >>> c = FifoCache(limit=2)
+        >>> c.put("a", 1); c.put("b", 2); c.put("c", 3)   # evicts "a"
+        >>> c.get("a") is None, c.get("b"), (c.hits, c.misses)
+        (True, 2, (1, 1))
+    """
 
     _MISS = object()
 
@@ -134,7 +140,22 @@ class FifoCache:
 
 @dataclasses.dataclass(frozen=True)
 class ExplorationRecord:
-    """Serializable outcome of one design point (one `explore()` call)."""
+    """Serializable outcome of one design point (one `explore()` call).
+
+    Carries its full point spec, so the result is reproducible from the
+    store alone; `metric()` resolves both objective names ('edp') and
+    record field names ('latency_cc').
+
+        >>> r = ExplorationRecord(key="k", workload="w", arch="a",
+        ...     arch_key="ak", granularity="line", objective="edp",
+        ...     priority="latency", latency_cc=2.0, energy_pj=3.0, edp=6.0,
+        ...     peak_mem_bytes=0.0, act_peak_bytes=0.0, allocation=(0, 1),
+        ...     ga_evaluations=0, runtime_s=0.0)
+        >>> r.metric("edp"), r.metric("latency_cc")
+        (6.0, 2.0)
+        >>> ExplorationRecord.from_dict(r.to_dict()) == r
+        True
+    """
 
     key: str                       # DesignPoint.content_key()
     workload: str
@@ -173,8 +194,27 @@ class ExplorationRecord:
         return cls(**d)
 
 
+def _demo_records() -> list[ExplorationRecord]:
+    """Three tiny records for the query-function doctests."""
+    mk = lambda key, arch, lat, e: ExplorationRecord(
+        key=key, workload="w", arch=arch, arch_key=arch, granularity="line",
+        objective="edp", priority="latency", latency_cc=lat, energy_pj=e,
+        edp=lat * e, peak_mem_bytes=0.0, act_peak_bytes=0.0, allocation=(0,),
+        ga_evaluations=0, runtime_s=0.0)
+    return [mk("a", "A", 1.0, 4.0), mk("b", "B", 2.0, 2.0),
+            mk("c", "A", 3.0, 3.0)]
+
+
 def best_record(records: Sequence[ExplorationRecord],
                 metric: str = "edp") -> ExplorationRecord:
+    """The record minimizing `metric` ('edp' | 'latency' | 'energy' | any
+    record field).
+
+        >>> best_record(_demo_records(), "edp").key
+        'a'
+        >>> best_record(_demo_records(), "energy_pj").key
+        'b'
+    """
     if not records:
         raise ValueError("no records")
     return min(records, key=lambda r: r.metric(metric))
@@ -183,7 +223,11 @@ def best_record(records: Sequence[ExplorationRecord],
 def pareto_records(records: Sequence[ExplorationRecord],
                    metrics: Sequence[str] = ("latency_cc", "energy_pj"),
                    ) -> list[ExplorationRecord]:
-    """Non-dominated subset, all metrics minimized; input order preserved."""
+    """Non-dominated subset, all metrics minimized; input order preserved.
+
+        >>> [r.key for r in pareto_records(_demo_records())]
+        ['a', 'b']
+    """
     vals = [tuple(r.metric(m) for m in metrics) for r in records]
     out = []
     for i, (r, v) in enumerate(zip(records, vals)):
@@ -200,7 +244,11 @@ def pivot_records(records: Sequence[ExplorationRecord], rows: str = "arch",
                   agg: Callable[[Sequence[float]], float] = min,
                   ) -> dict[str, dict[str, float]]:
     """Per-axis pivot (the paper's Fig.-13-style tables): rows x cols ->
-    `agg` over the `value` metric of every matching record."""
+    `agg` over the `value` metric of every matching record.
+
+        >>> pivot_records(_demo_records(), rows="arch", value="latency_cc")
+        {'A': {'w': 1.0}, 'B': {'w': 2.0}}
+    """
     cells: dict[str, dict[str, list[float]]] = {}
     for r in records:
         row, col = str(getattr(r, rows)), str(getattr(r, cols))
@@ -211,7 +259,22 @@ def pivot_records(records: Sequence[ExplorationRecord], rows: str = "arch",
 
 @dataclasses.dataclass
 class GranularitySweep:
-    """Typed result of a granularity co-exploration (no stringly 'best' key)."""
+    """Typed result of a granularity co-exploration (no stringly 'best' key).
+
+    Returned by `ExplorationSession.explore_granularity`: one full
+    `StreamResult` per granularity label plus the objective-best label.
+
+        >>> from repro.configs.paper_workloads import squeezenet
+        >>> from repro.hw.catalog import mc_hom_tpu
+        >>> sweep = default_session().explore_granularity(
+        ...     squeezenet(), mc_hom_tpu(),
+        ...     granularities=["layer", ("tile", 32, 1)],
+        ...     pop_size=4, generations=2)
+        >>> sorted(sweep.results), sweep.best_label in sweep.results
+        (['layer', 'tile32x1'], True)
+        >>> sweep.best is sweep.results[sweep.best_label]
+        True
+    """
 
     results: dict[str, StreamResult]   # granularity label -> full result
     objective: str
@@ -228,7 +291,19 @@ class GranularitySweep:
 @dataclasses.dataclass
 class SweepResult:
     """Outcome of `ExplorationSession.run`: records in point order plus
-    scheduling accounting (how many points actually ran vs store hits)."""
+    scheduling accounting (how many points actually ran vs store hits).
+
+    `best`/`pareto`/`pivot` delegate to the module-level query helpers
+    over this sweep's records; see the `ExplorationSession` doctest for an
+    end-to-end example.
+
+        >>> sweep = SweepResult(records=_demo_records(), n_scheduled=3,
+        ...                     n_from_store=0, wall_s=0.0)
+        >>> sweep.best("edp").key, len(sweep)
+        ('a', 3)
+        >>> [r.key for r in sweep.pareto()]
+        ['a', 'b']
+    """
 
     records: list[ExplorationRecord]
     n_scheduled: int
@@ -256,7 +331,16 @@ class ResultStore:
     With a `cache_dir` every record is appended to `records.jsonl` as it
     arrives and reloaded on construction (last write wins), making repeated
     sweeps incremental across processes and sessions; with `cache_dir=None`
-    the store is memory-only and lives as long as the session."""
+    the store is memory-only and lives as long as the session.
+
+        >>> store = ResultStore()                   # memory-only
+        >>> rec = _demo_records()[0]
+        >>> store.put(rec)
+        >>> store.get("a") == rec, "a" in store, len(store)
+        (True, True, 1)
+        >>> [r.key for r in store.for_workload("w")]
+        ['a']
+    """
 
     FILENAME = "records.jsonl"
 
@@ -327,7 +411,26 @@ def _process_worker(job: "tuple[DesignPoint, tuple]") -> dict:
 
 class ExplorationSession:
     """Owns exploration state: graph/engine caches, the result store, and
-    the executors that walk a `DesignSpace`."""
+    the executors that walk a `DesignSpace`.
+
+    The one-call pipeline (`explore`) and the sweep pipeline (`run`) share
+    the same memoized graph/engine builds; `run` additionally serves
+    repeated points from the content-keyed store without scheduling.
+
+        >>> from repro.api.designspace import DesignSpace, GAConfig
+        >>> from repro.configs.paper_workloads import squeezenet
+        >>> from repro.hw.catalog import mc_hom_tpu
+        >>> space = DesignSpace(workloads=["squeezenet"],
+        ...                     archs={"MC:HomTPU": mc_hom_tpu},
+        ...                     granularities=[("tile", 32, 1)],
+        ...                     ga=GAConfig(pop_size=4, generations=2))
+        >>> session = ExplorationSession()          # memory-only store
+        >>> sweep = session.run(space)
+        >>> len(sweep), sweep.n_scheduled, sweep.best("edp").arch
+        (1, 1, 'MC:HomTPU')
+        >>> session.run(space).n_from_store         # re-run: zero new points
+        1
+    """
 
     def __init__(self, cache_dir: str | None = None, cache_limit: int = 32,
                  max_workers: int | None = None, warm_start: bool = False):
@@ -718,7 +821,11 @@ _DEFAULT_SESSION: ExplorationSession | None = None
 
 
 def default_session() -> ExplorationSession:
-    """Lazily created memory-only session shared by the legacy one-call API."""
+    """Lazily created memory-only session shared by the legacy one-call API.
+
+        >>> default_session() is default_session()
+        True
+    """
     global _DEFAULT_SESSION
     if _DEFAULT_SESSION is None:
         _DEFAULT_SESSION = ExplorationSession()

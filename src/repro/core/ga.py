@@ -94,6 +94,24 @@ class GAResult:
 
 
 class GeneticAllocator:
+    """NSGA-II search over layer-core allocations (see module docstring).
+
+    Pass per-genome `evaluate` (tuple of minimized objectives) or batched
+    `evaluate_population` ((K, G) matrix -> (K, M) objectives); `run()`
+    returns the best genome under `scalarize` plus the final Pareto front.
+
+        >>> import numpy as np
+        >>> ga = GeneticAllocator(
+        ...     n_genes=4, feasible_cores=[(0, 1)] * 4,
+        ...     evaluate=lambda g: (float(np.sum(g)), float(g[0]) + 1.0),
+        ...     pop_size=8, generations=6, seed=0)
+        >>> res = ga.run()
+        >>> res.best_genome.tolist(), res.best_objs.tolist()
+        ([0, 0, 0, 0], [0.0, 1.0])
+        >>> ga.evaluations <= ga.queries    # memoized fitness
+        True
+    """
+
     def __init__(
         self,
         n_genes: int,

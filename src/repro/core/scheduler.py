@@ -4,7 +4,12 @@ Event-list scheduler over the fine-grained CN graph. Resources:
   * each core (free-from time),
   * the shared inter-core communication bus — a *communication node* is
     inserted for every producer->consumer edge crossing cores; the bus serves
-    nodes first-come-first-serve (contention),
+    nodes first-come-first-serve (contention).  With a cluster topology on
+    the accelerator (`repro.hw.topology`) the one bus becomes a set of
+    channels — per-cluster local buses plus inter-cluster links — and a
+    cross-cluster transfer occupies every channel on its route in order
+    (hops x per-link latency/energy, FCFS per channel); a single-cluster
+    topology degenerates to the flat bus bit-for-bit,
   * the shared off-chip DRAM port — *off-chip access nodes* model weight
     fetches (with FIFO eviction from the core's weight memory), first-layer
     input activations, and activation spills when a core's activation memory
@@ -214,6 +219,19 @@ class ScheduleEngine:
         self._w_cap = [c.weight_mem_bytes for c in acc.cores]
         self._is_aimc = [c.core_type == "aimc" for c in acc.cores]
         self._shared_l1 = acc.comm_style == "shared_mem"
+        # ---- cluster topology: per-transfer channel routes ----------------
+        # With a topology the shared bus becomes a set of channels (per-
+        # cluster local buses + inter-cluster links); routes[u_core][core]
+        # is the tuple of channel ids a u->core transfer occupies in order.
+        # A single-cluster topology routes everything over channel 0, whose
+        # bandwidth/energy/FCFS arithmetic is bit-identical to the flat bus.
+        if acc.topology is not None and not self._shared_l1:
+            from repro.hw.topology import build_channels
+            self._chan_bw, self._chan_e, self._routes = build_channels(acc)
+            self._n_chan = len(self._chan_bw)
+        else:
+            self._chan_bw = self._chan_e = self._routes = None
+            self._n_chan = 0
         if self._shared_l1:
             self._act_cap0 = [0.0] * acc.n_cores
             self._act_cap0[0] = float(sum(c.act_mem_bytes for c in acc.cores))
@@ -324,6 +342,20 @@ class ScheduleEngine:
         barrier keyed by the allocation prefix, and resumes this schedule
         from the deepest stored snapshot whose prefix matches — the result
         is bit-identical to a cold run.
+
+            >>> from repro.configs.paper_workloads import squeezenet
+            >>> from repro.core import CostModel, build_graph
+            >>> from repro.core.allocator import manual_pingpong
+            >>> from repro.hw.catalog import mc_hom_tpu
+            >>> w, acc = squeezenet(), mc_hom_tpu()
+            >>> graph = build_graph(w, acc, ("tile", 16, 1))
+            >>> engine = ScheduleEngine(graph, CostModel(w, acc), acc)
+            >>> alloc = manual_pingpong(w, acc)
+            >>> res = engine.schedule(alloc, priority="latency")
+            >>> res.latency_cc > 0 < res.energy_pj
+            True
+            >>> engine.evaluate(alloc) == (res.latency_cc, res.energy_pj)
+            True
         """
         if priority not in ("latency", "memory"):
             raise ValueError(f"unknown priority {priority!r}")
@@ -355,6 +387,7 @@ class ScheduleEngine:
         cost_rows = self._cost_rows
         external_of = self._external_of
         w_cap, is_aimc, shared_l1 = self._w_cap, self._is_aimc, self._shared_l1
+        routes, chan_bw, chan_e = self._routes, self._chan_bw, self._chan_e
         heappush, heappop = heapq.heappush, heapq.heappop
         heap_code = self._heap_code
         code_mask = self._code_mask
@@ -383,6 +416,7 @@ class ScheduleEngine:
             core_free = [0.0] * n_cores
             core_busy = [0.0] * n_cores
             bus_free = 0.0
+            chan_free = [0.0] * self._n_chan
             dram_free = 0.0
             finish = [0.0] * n
             act_used = [0.0] * n_cores
@@ -414,7 +448,8 @@ class ScheduleEngine:
             (k0, fin_p, indeg_s, rk_s, s_core_free, s_core_busy, s_act_used,
              s_res_used, s_resident, s_sent, s_rem, s_spill, have_spills,
              bus_free, dram_free, frontier, e_compute, e_sram, e_bus, e_dram,
-             comm_max, dram_max, s_barrier, ready_ids) = snap
+             comm_max, dram_max, s_barrier, ready_ids, s_chan) = snap
+            chan_free = list(s_chan)
             self.ckpt_stats["resume_hits"] += 1
             self.ckpt_stats["cns_skipped"] += k0
             core_free = list(s_core_free)
@@ -507,7 +542,7 @@ class ScheduleEngine:
                                 dict(spilled), have_spills, bus_free,
                                 dram_free, frontier, e_compute, e_sram, e_bus,
                                 e_dram, comm_max, dram_max, dict(seg_barrier),
-                                tuple(ready))
+                                tuple(ready), tuple(chan_free))
                             self.ckpt_stats["snapshots"] += 1
                             if len(store) > self.ckpt_capacity:
                                 store.popitem(last=False)
@@ -549,11 +584,30 @@ class ScheduleEngine:
                         fresh = e_bytes if e_bytes < rem else rem
                         remaining_new[u] = rem - fresh
                         fu = finish[u]
-                        start = bus_free if bus_free > fu else fu
-                        dur = fresh * 8.0 / bus_bw
-                        end = start + dur
-                        bus_free = end
-                        e_bus += fresh * 8.0 * bus_e_bit
+                        if routes is None:
+                            start = bus_free if bus_free > fu else fu
+                            dur = fresh * 8.0 / bus_bw
+                            end = start + dur
+                            bus_free = end
+                            e_bus += fresh * 8.0 * bus_e_bit
+                        else:
+                            # multi-hop transfer: occupy each channel of the
+                            # route in order (store-and-forward), FCFS per
+                            # channel; a single-cluster route is one local-
+                            # bus hop with the flat-bus arithmetic exactly
+                            end = fu
+                            start = fu
+                            first = True
+                            for ch in routes[u_core][core]:
+                                s = chan_free[ch]
+                                if s < end:
+                                    s = end
+                                if first:
+                                    start = s
+                                    first = False
+                                end = s + fresh * 8.0 / chan_bw[ch]
+                                chan_free[ch] = end
+                                e_bus += fresh * 8.0 * chan_e[ch]
                         if record:
                             comm_intervals.append((start, end, u, i, int(fresh)))
                         if end > comm_max:
@@ -840,6 +894,15 @@ def schedule_reference(
     dram_free = 0.0
     finish = np.zeros(n)
 
+    # cluster topology: channel resources replacing the one shared bus
+    if accelerator.topology is not None and accelerator.comm_style != "shared_mem":
+        from repro.hw.topology import build_channels
+        chan_bw, chan_e, topo_routes = build_channels(accelerator)
+        chan_free = [0.0] * len(chan_bw)
+    else:
+        chan_bw = chan_e = topo_routes = None
+        chan_free = []
+
     # per-core memory state; shared-L1 architectures pool all activation
     # capacity into one space (index 0) that every core addresses
     shared_l1 = accelerator.comm_style == "shared_mem"
@@ -955,16 +1018,30 @@ def schedule_reference(
                         rem = cns[u].out_bytes
                     fresh = min(e_bytes, rem)
                     remaining_new[u] = rem - fresh
-                    start = max(bus_free, finish[u])
-                    dur = fresh * 8.0 / bus_bw
-                    bus_free = start + dur
-                    energy["bus"] += fresh * 8.0 * accelerator.bus_energy_pj_per_bit
-                    comm_intervals.append((start, start + dur, u, i, int(fresh)))
+                    if topo_routes is None:
+                        start = max(bus_free, finish[u])
+                        dur = fresh * 8.0 / bus_bw
+                        bus_free = start + dur
+                        energy["bus"] += fresh * 8.0 * accelerator.bus_energy_pj_per_bit
+                        end_t = start + dur
+                    else:
+                        # multi-hop: store-and-forward over the route's
+                        # channels, FCFS on each (see ScheduleEngine)
+                        end_t = start = finish[u]
+                        first = True
+                        for ch in topo_routes[u_core][core]:
+                            s = max(chan_free[ch], end_t)
+                            if first:
+                                start, first = s, False
+                            end_t = s + fresh * 8.0 / chan_bw[ch]
+                            chan_free[ch] = end_t
+                            energy["bus"] += fresh * 8.0 * chan_e[ch]
+                    comm_intervals.append((start, end_t, u, i, int(fresh)))
                     # consumer allocates at comm start; producer frees at comm end
                     alloc_act(core, fresh, start, u)
-                    free_act(u_core, fresh, start + dur)
-                    sent_to[key] = start + dur
-                    data_ready = max(data_ready, start + dur)
+                    free_act(u_core, fresh, end_t)
+                    sent_to[key] = end_t
+                    data_ready = max(data_ready, end_t)
             # spilled producer data must be read back through the DRAM port
             sp = spilled.get(u, 0.0)
             if sp > 0:

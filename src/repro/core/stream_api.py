@@ -43,10 +43,20 @@ def core_symmetry_canonicalize(accelerator: Accelerator):
 
     Cores are grouped by their *content* — the `name` label cannot affect
     any cost or capacity, so "tpu0" and "tpu1" with equal specs are one
-    group."""
+    group.  With a cluster topology, groups are additionally split by
+    cluster: two content-equal cores on different chiplets are *not*
+    interchangeable (their transfers take different routes), so only
+    within-cluster permutations are canonicalized."""
+    topo = accelerator.topology
+    if topo is None:
+        cluster_of = [0] * accelerator.n_cores
+    else:
+        c2c = topo.core_to_cluster()
+        cluster_of = [c2c[c.name] for c in accelerator.cores]
     groups: dict = {}
     for i, c in enumerate(accelerator.cores):
-        groups.setdefault(dataclasses.replace(c, name=""), []).append(i)
+        groups.setdefault((cluster_of[i], dataclasses.replace(c, name="")),
+                          []).append(i)
     sym = {i: tuple(members) for members in
            (m for m in groups.values() if len(m) > 1) for i in members}
     if not sym:

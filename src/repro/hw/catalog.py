@@ -10,8 +10,12 @@ port. Pool / residual-add layers run on an additional small SIMD core
 """
 from __future__ import annotations
 
+import dataclasses
+
 from repro.hw.accelerator import Accelerator
 from repro.hw.core_model import CoreModel
+from repro.hw.topology import (LINK_BW_BITS_PER_CC, LINK_ENERGY_PJ_PER_BIT,
+                               partition_topology)
 
 
 # ---------------------------------------------------------------------------
@@ -99,6 +103,51 @@ EXPLORATION_ARCHITECTURES = {
     "SC:TPU": sc_tpu, "SC:Eye": sc_eye, "SC:Env": sc_env,
     "MC:HomTPU": mc_hom_tpu, "MC:HomEye": mc_hom_eye, "MC:HomEnv": mc_hom_env,
     "MC:Hetero": mc_hetero,
+}
+
+
+# ---------------------------------------------------------------------------
+# chiplet variants: the multi-core iso-area architectures re-packaged as
+# 2/4 chiplets joined by UCIe-class die-to-die links (64 bit/cc, 0.4 pJ/bit
+# vs the 128 bit/cc @ 0.08 pJ/bit on-die bus).  Kept in their own registry:
+# EXPLORATION_ARCHITECTURES pins the paper's Fig. 11-15 sweep.
+# ---------------------------------------------------------------------------
+
+def with_chiplets(acc: Accelerator, n_chiplets: int, *,
+                  generator: str = "ring",
+                  link_bw_bits_per_cc: float = LINK_BW_BITS_PER_CC,
+                  link_energy_pj_per_bit: float = LINK_ENERGY_PJ_PER_BIT,
+                  ) -> Accelerator:
+    """`acc` partitioned into `n_chiplets` equal clusters of its compute
+    cores (the SIMD helper joins cluster 0), renamed ``<name>-chip<n>``.
+
+    ``n_chiplets=1`` is the degenerate single-cluster topology, which
+    schedules bit-identically to the flat accelerator (golden-tested).
+    """
+    topo = partition_topology(
+        acc, n_chiplets, generator=generator,
+        link_bw_bits_per_cc=link_bw_bits_per_cc,
+        link_energy_pj_per_bit=link_energy_pj_per_bit)
+    return dataclasses.replace(acc, name=f"{acc.name}-chip{n_chiplets}",
+                               topology=topo)
+
+
+def mc_hom_tpu_chip2() -> Accelerator:
+    return with_chiplets(mc_hom_tpu(), 2)
+
+
+def mc_hom_tpu_chip4() -> Accelerator:
+    return with_chiplets(mc_hom_tpu(), 4)
+
+
+def mc_hetero_chip2() -> Accelerator:
+    return with_chiplets(mc_hetero(), 2)
+
+
+CHIPLET_ARCHITECTURES = {
+    "MC:HomTPU-chip2": mc_hom_tpu_chip2,
+    "MC:HomTPU-chip4": mc_hom_tpu_chip4,
+    "MC:Hetero-chip2": mc_hetero_chip2,
 }
 
 

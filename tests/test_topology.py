@@ -1,0 +1,332 @@
+"""Chiplet-topology model: spec round-trips, hop-table derivation, and the
+degenerate-case golden contract (a single-cluster topology schedules
+bit-identically to the flat single-bus `ArchSpec`)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (ArchSpec, ClusterSpec, CoreSpec, DesignSpace, GAConfig,
+                       LinkSpec, TopologySpec, as_arch_spec, max_clusters,
+                       partition_topology)
+from repro.configs.paper_workloads import squeezenet
+from repro.core import CostModel, build_graph, explore
+from repro.core.allocator import manual_pingpong
+from repro.core.scheduler import ScheduleEngine, schedule_reference
+from repro.core.stream_api import core_symmetry_canonicalize
+from repro.hw.catalog import (CHIPLET_ARCHITECTURES, mc_hetero, mc_hom_tpu,
+                              simd_core, with_chiplets)
+from repro.hw.topology import build_channels
+
+pytestmark = pytest.mark.tier1
+
+
+# ---------------------------------------------------------------------------
+# spec serialization + content hashing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(CHIPLET_ARCHITECTURES))
+def test_chiplet_catalog_round_trip(name):
+    acc = CHIPLET_ARCHITECTURES[name]()
+    spec = ArchSpec.from_accelerator(acc)
+    assert spec.to_accelerator() == acc
+    assert ArchSpec.from_json(spec.to_json()) == spec
+    json.loads(spec.to_json())
+
+
+def test_hop_table_spec_round_trip():
+    t = TopologySpec(clusters=(("a", ("x",)), ("b", ("y",))),
+                     hops=((0, 3), (3, 0)))
+    spec = ArchSpec(name="hops", cores=(
+        CoreSpec.from_core(mc_hom_tpu().cores[0]).with_(name="x"),
+        CoreSpec.from_core(mc_hom_tpu().cores[1]).with_(name="y")),
+        topology=t)
+    back = ArchSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.topology.hops == ((0, 3), (3, 0))
+
+
+def test_flat_content_key_is_stable():
+    """Flat specs omit the topology entry, so pre-topology content keys
+    (and every stored sweep record keyed by them) remain valid."""
+    spec = as_arch_spec(mc_hetero())
+    assert "topology" not in spec.to_dict()
+    assert spec.content_key() == "3c27e2d6bdc4c4ce"  # pre-topology value
+
+
+def test_content_key_tracks_topology():
+    flat = as_arch_spec(mc_hom_tpu())
+    chip2 = as_arch_spec(with_chiplets(mc_hom_tpu(), 2))
+    chip2b = as_arch_spec(with_chiplets(mc_hom_tpu(), 2))
+    assert chip2.content_key() == chip2b.content_key()
+    assert chip2.content_key() != flat.content_key()
+    faster = chip2.with_(topology=dataclasses.replace(
+        chip2.topology, links=tuple(
+            dataclasses.replace(l, bw_bits_per_cc=l.bw_bits_per_cc * 2)
+            for l in chip2.topology.links)))
+    assert faster.content_key() != chip2.content_key()
+
+
+# ---------------------------------------------------------------------------
+# hop-table derivation (generators + explicit tables)
+# ---------------------------------------------------------------------------
+
+def test_ring_hop_derivation():
+    t = TopologySpec.ring({f"c{i}": (f"core{i}",) for i in range(5)})
+    assert len(t.links) == 5
+    h = t.hop_table()
+    assert h[0] == (0, 1, 2, 2, 1)           # wrap-around shortest paths
+    assert all(h[i][j] == h[j][i] for i in range(5) for j in range(5))
+    two = TopologySpec.ring({"a": ("x",), "b": ("y",)})
+    assert len(two.links) == 1               # no duplicate 2-cluster ring link
+    assert two.hop_table() == ((0, 1), (1, 0))
+    one = TopologySpec.ring({"a": ("x",)})
+    assert one.links == () and one.hop_table() == ((0,),)
+
+
+def test_mesh_hop_derivation():
+    t = TopologySpec.mesh({f"c{i}": (f"core{i}",) for i in range(6)}, cols=3)
+    # 2x3 mesh: 7 links (4 horizontal + 3 vertical), corner-to-corner 3 hops
+    assert len(t.links) == 7
+    h = t.hop_table()
+    assert h[0][5] == 3 and h[0][1] == 1 and h[0][3] == 1 and h[2][3] == 3
+
+
+def test_explicit_hops_validation():
+    mk = lambda hops: TopologySpec(
+        clusters=(("a", ("x",)), ("b", ("y",))), hops=hops).validate()
+    assert mk(((0, 2), (2, 0))).hop_table() == ((0, 2), (2, 0))
+    with pytest.raises(ValueError, match="symmetric"):
+        mk(((0, 2), (1, 0)))
+    with pytest.raises(ValueError, match="diagonal"):
+        mk(((1, 2), (2, 0)))
+    with pytest.raises(ValueError, match="at least one hop"):
+        mk(((0, 0), (0, 0)))
+    with pytest.raises(ValueError, match="2x2"):
+        mk(((0,),))
+
+
+def test_topology_validation_against_cores():
+    acc = mc_hom_tpu()
+    with pytest.raises(ValueError, match="has cores"):
+        dataclasses.replace(acc, topology=TopologySpec.ring(
+            {"a": ("tpu0", "tpu1")}))       # misses tpu2/tpu3/simd
+    with pytest.raises(ValueError, match="more than one cluster"):
+        TopologySpec.ring({"a": ("x",), "b": ("x",)}).validate()
+    with pytest.raises(ValueError, match="unreachable"):
+        TopologySpec(clusters=(("a", ("x",)), ("b", ("y",)))).validate()
+    with pytest.raises(ValueError, match="shared_mem"):
+        from repro.hw.catalog import diana
+        d = diana()
+        dataclasses.replace(d, topology=TopologySpec.ring(
+            {"all": tuple(c.name for c in d.cores)}))
+
+
+def test_partition_topology():
+    t = partition_topology(mc_hom_tpu(), 2)
+    assert [c.cores for c in t.clusters] == \
+        [("tpu0", "tpu1", "simd"), ("tpu2", "tpu3")]
+    with pytest.raises(ValueError, match="equal chiplets"):
+        partition_topology(mc_hom_tpu(), 3)
+    with pytest.raises(ValueError, match="generator"):
+        partition_topology(mc_hom_tpu(), 2, generator="torus")
+
+
+def test_grid_explicit_topology_entries():
+    """Explicit TopologySpec axis entries attach only to grid points whose
+    core names they cover, and distinct topologies with equal cluster
+    counts get distinct names (axis-position labels)."""
+    tpu = CoreSpec.from_core(mc_hetero().cores[2])
+    names4 = [f"tpu0{i}" for i in range(4)]
+    ring = TopologySpec.ring({f"r{k}": (names4[k],) for k in range(4)})
+    mesh = TopologySpec.mesh({f"m{k}": (names4[k],) for k in range(4)}, cols=2)
+    grid = ArchSpec.grid(tpu, cores=[2, 4], chiplets=[ring, mesh])
+    # the 2-core points are skipped (topologies name tpu00..tpu03)
+    assert [g.n_cores for g in grid] == [4, 4]
+    assert len({g.name for g in grid}) == 2
+    assert len({g.content_key() for g in grid}) == 2
+    for g in grid:
+        g.to_accelerator()              # validates cluster/core coverage
+
+
+def test_grid_chiplet_axis():
+    tpu = CoreSpec.from_core(mc_hetero().cores[2])
+    grid = ArchSpec.grid(tpu, cores=[2, 4], chiplets=[None, 2, 4],
+                         simd=simd_core())
+    # 2 cores x {flat, chip2} + 4 cores x {flat, chip2, chip4}: chip4 of a
+    # 2-core point does not divide and is skipped
+    assert len(grid) == 5
+    assert len({g.name for g in grid}) == 5
+    assert len({g.content_key() for g in grid}) == 5
+    by_name = {g.name: g for g in grid}
+    chip2 = by_name["tpu0x4-a112w128-chip2"]
+    assert chip2.n_clusters == 2
+    assert chip2.topology.clusters[0].cores == ("tpu00", "tpu01", "simd")
+    chip2.to_accelerator()                  # validates cluster/core names
+
+
+# ---------------------------------------------------------------------------
+# scheduling semantics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sqz_setup():
+    w = squeezenet()
+    flat = mc_hom_tpu()
+    graph = build_graph(w, flat, ("tile", 16, 1))
+    alloc = manual_pingpong(w, flat)
+    return w, flat, graph, alloc
+
+
+def _engine(w, graph, acc):
+    return ScheduleEngine(graph, CostModel(w, acc), acc)
+
+
+def _assert_identical(a, b):
+    assert a.latency_cc == b.latency_cc
+    assert a.energy_pj == b.energy_pj
+    assert a.energy_breakdown == b.energy_breakdown
+    assert a.peak_mem_bytes == b.peak_mem_bytes
+    assert a.act_peak_bytes == b.act_peak_bytes
+    assert a.mem_events == b.mem_events
+    assert a.comm_intervals == b.comm_intervals
+    assert a.dram_intervals == b.dram_intervals
+    assert np.array_equal(a.core_busy, b.core_busy)
+
+
+@pytest.mark.parametrize("priority", ["latency", "memory"])
+def test_single_cluster_degenerates_to_flat(sqz_setup, priority):
+    """The golden degenerate case: one cluster, zero hops == the flat
+    shared-bus model, bit for bit (the single-cluster route is priced
+    through the channel path, not special-cased away)."""
+    w, flat, graph, alloc = sqz_setup
+    chip1 = with_chiplets(flat, 1)
+    e1 = _engine(w, graph, chip1)
+    assert e1._routes is not None           # channel path exercised
+    for mode in ({}, {"segment": False}, {"strict_layers": True}):
+        _assert_identical(
+            _engine(w, graph, flat).schedule(alloc, priority, **mode),
+            e1.schedule(alloc, priority, **mode))
+
+
+def test_single_cluster_explore_matches_flat():
+    """End-to-end GA exploration on the degenerate topology reproduces the
+    flat result exactly (same trajectory, same allocation, same metrics)."""
+    w = squeezenet()
+    flat = mc_hom_tpu()
+    r_flat = explore(w, flat, granularity=("tile", 16, 1),
+                     pop_size=6, generations=3)
+    r_chip1 = explore(w, with_chiplets(flat, 1), granularity=("tile", 16, 1),
+                      pop_size=6, generations=3)
+    assert r_chip1.latency_cc == r_flat.latency_cc
+    assert r_chip1.energy_pj == r_flat.energy_pj
+    assert np.array_equal(r_chip1.allocation, r_flat.allocation)
+
+
+@pytest.mark.parametrize("priority", ["latency", "memory"])
+def test_engine_matches_reference_on_chiplets(sqz_setup, priority):
+    w, flat, graph, alloc = sqz_setup
+    for acc in (with_chiplets(flat, 2), with_chiplets(flat, 4),
+                with_chiplets(mc_hetero(), 2)):
+        a = manual_pingpong(w, acc)
+        got = _engine(w, graph, acc).schedule(a, priority)
+        ref = schedule_reference(graph, CostModel(w, acc), a, acc, priority)
+        _assert_identical(got, ref)
+
+
+def test_checkpoint_resume_on_chiplets(sqz_setup):
+    """Segment-checkpoint resumes stay bit-identical with channel state."""
+    w, flat, graph, alloc = sqz_setup
+    acc = with_chiplets(flat, 2)
+    engine = _engine(w, graph, acc)
+    cold = engine.evaluate(alloc, "latency")
+    mutated = np.array(alloc)
+    mutated[-1] = (mutated[-1] + 1) % 4
+    engine.evaluate(mutated, "latency")
+    warm = engine.evaluate(alloc, "latency")
+    assert engine.ckpt_stats["resume_hits"] > 0
+    assert warm == cold
+
+
+def test_multi_hop_pricing(sqz_setup):
+    """hops=2 prices a transfer at twice the link energy and no less
+    latency than hops=1; more clusters never cheapen the interconnect."""
+    w, flat, graph, alloc = sqz_setup
+
+    def hops_arch(h):
+        topo = TopologySpec(
+            clusters=(("a", ("tpu0", "tpu1", "simd")), ("b", ("tpu2", "tpu3"))),
+            hops=((0, h), (h, 0)))
+        return dataclasses.replace(flat, name=f"hops{h}", topology=topo)
+
+    r1 = _engine(w, graph, hops_arch(1)).schedule(alloc)
+    r2 = _engine(w, graph, hops_arch(2)).schedule(alloc)
+    flat_res = _engine(w, graph, flat).schedule(alloc)
+    # inter-cluster bytes pay per hop: bus energy above the intra-cluster
+    # share (the flat-local part of r1) exactly doubles
+    intra = 2 * r1.energy_breakdown["bus"] - r2.energy_breakdown["bus"]
+    assert r2.energy_breakdown["bus"] > r1.energy_breakdown["bus"] > \
+        flat_res.energy_breakdown["bus"] * 0.99
+    assert intra >= -1e-6
+    assert r2.latency_cc >= r1.latency_cc
+
+
+def test_link_contention_serializes(sqz_setup):
+    """Halving link bandwidth cannot reduce latency and strictly stretches
+    the busiest transfer windows (FCFS per link)."""
+    w, flat, graph, alloc = sqz_setup
+    fast = with_chiplets(flat, 2, link_bw_bits_per_cc=128.0)
+    slow = with_chiplets(flat, 2, link_bw_bits_per_cc=16.0)
+    r_fast = _engine(w, graph, fast).schedule(alloc)
+    r_slow = _engine(w, graph, slow).schedule(alloc)
+    assert r_slow.latency_cc >= r_fast.latency_cc
+    dur = lambda r: sum(e - s for s, e, *_ in r.comm_intervals)
+    assert dur(r_slow) > dur(r_fast)
+
+
+def test_build_channels_routes():
+    acc = with_chiplets(mc_hom_tpu(), 2)
+    chan_bw, chan_e, routes = build_channels(acc)
+    # 2 local buses + 1 ring link
+    assert len(chan_bw) == 3
+    assert chan_bw[:2] == [acc.bus_bw_bits_per_cc] * 2
+    names = [c.name for c in acc.cores]
+    i = {n: k for k, n in enumerate(names)}
+    assert routes[i["tpu0"]][i["tpu1"]] == (0,)      # intra-cluster: local bus
+    assert routes[i["tpu2"]][i["tpu3"]] == (1,)
+    assert routes[i["tpu0"]][i["tpu2"]] == (2,)      # cross-die: the link
+    assert routes[i["tpu2"]][i["simd"]] == (2,)
+
+
+def test_symmetry_respects_clusters():
+    """Content-equal cores on different chiplets are not interchangeable:
+    canonicalization may only permute within a cluster."""
+    flat = mc_hom_tpu()
+    canon_flat = core_symmetry_canonicalize(flat)
+    assert np.array_equal(canon_flat([3, 2, 1]), [0, 1, 2])
+    chip2 = with_chiplets(flat, 2)
+    canon = core_symmetry_canonicalize(chip2)
+    # cluster {0,1} and {2,3}: 3 maps to 2 (its cluster's first slot), 1 to 0
+    assert np.array_equal(canon([3, 2, 1]), [2, 3, 0])
+    assert np.array_equal(canon([1, 1, 3]), [0, 0, 2])
+    # fully split: every core is its own cluster, no symmetry at all
+    assert core_symmetry_canonicalize(with_chiplets(flat, 4)) is None
+
+
+def test_design_space_topology_axis_and_constraint():
+    flat = mc_hom_tpu()
+    space = DesignSpace(
+        workloads=["squeezenet"],
+        archs={"flat": flat, "chip2": with_chiplets(flat, 2),
+               "chip4": with_chiplets(flat, 4)},
+        granularities=[("tile", 32, 1)],
+        ga=GAConfig(pop_size=4, generations=2),
+        constraints=[max_clusters(2)])
+    assert [p.arch.name for p in space] == ["flat", "chip2"]
+    keys = {p.content_key() for p in space}
+    assert len(keys) == 2
+    # topology survives the point's spec dict (store round trip)
+    p = [p for p in space if p.arch.name == "chip2"][0]
+    restored = ArchSpec.from_dict(p.spec_dict()["arch"])
+    assert restored == p.arch

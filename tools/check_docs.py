@@ -1,0 +1,105 @@
+"""Docs gate (`make docs`): markdown link check + public-API doctests.
+
+1. Scans the repo's markdown (README/ROADMAP/docs/...) for `[text](target)`
+   links and verifies every *relative* target resolves to an existing file
+   (external http(s)/mailto links and pure #anchors are skipped — no
+   network access here).
+2. Runs the executable docstring examples of the public API surface
+   (`repro.api.*`, the topology model, the scheduler, the GA) through
+   `doctest`.
+
+Exits non-zero on any broken link or failed example.
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MARKDOWN = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md",
+            "ISSUE.md", "SNIPPETS.md"]
+
+DOCTEST_MODULES = [
+    "repro.api",
+    "repro.api.archspec",
+    "repro.api.designspace",
+    "repro.api.session",
+    "repro.hw.topology",
+    "repro.hw.catalog",
+    "repro.core.ga",
+    "repro.core.scheduler",
+    "repro.core.stream_api",
+]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_markdown() -> list[str]:
+    files = [f for f in MARKDOWN if os.path.exists(os.path.join(ROOT, f))]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        files += sorted(os.path.join("docs", f) for f in os.listdir(docs_dir)
+                        if f.endswith(".md"))
+    return files
+
+
+def check_links() -> list[str]:
+    problems = []
+    for rel in iter_markdown():
+        path = os.path.join(ROOT, rel)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks routinely contain `dict[key](args)`-looking
+        # text that is not a link — strip them before scanning
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in _LINK.findall(text):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            target_path = target.split("#", 1)[0]
+            if not target_path:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target_path))
+            if not os.path.exists(resolved):
+                problems.append(f"{rel}: broken link -> {target}")
+    return problems
+
+
+def run_doctests() -> tuple[int, int, list[str]]:
+    attempted, failed, failures = 0, 0, []
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        res = doctest.testmod(mod, verbose=False)
+        attempted += res.attempted
+        failed += res.failed
+        if res.failed:
+            failures.append(f"{name}: {res.failed}/{res.attempted} failed")
+    return attempted, failed, failures
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    link_problems = check_links()
+    files = iter_markdown()
+    print(f"link check: {len(files)} markdown files", end="")
+    if link_problems:
+        print(f", {len(link_problems)} broken links:")
+        for p in link_problems:
+            print(f"  {p}")
+    else:
+        print(", all relative links resolve")
+    attempted, failed, failures = run_doctests()
+    print(f"doctests: {attempted} examples over {len(DOCTEST_MODULES)} "
+          f"modules, {failed} failed")
+    for f in failures:
+        print(f"  {f}")
+    return 1 if (link_problems or failed) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
