@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: all test tier1 docs bench bench-quick bench-full
+.PHONY: all test tier1 docs bench bench-quick bench-full bench-list
 
 # default flow: the full suite plus the docs gate (link check + doctests)
 all: test docs
@@ -23,9 +23,13 @@ docs:
 bench:
 	$(PY) -m benchmarks.run
 
-# the three scheduling benches (GA hot path) in quick mode
+# the scheduling benches (GA hot path) + the sweep runtime in quick mode
 bench-quick:
-	$(PY) -m benchmarks.run --only scheduler_throughput,ga_allocation,exploration
+	$(PY) -m benchmarks.run --only scheduler_throughput,ga_allocation,exploration,sweep_runtime
 
 bench-full:
 	$(PY) -m benchmarks.run --full
+
+# registered bench slugs (a typo'd --only slug is an error, not a no-op)
+bench-list:
+	$(PY) -m benchmarks.run --list

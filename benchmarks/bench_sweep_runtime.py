@@ -1,0 +1,118 @@
+"""Sweep runtime: serial vs pooled vs shard-merged executor throughput.
+
+Runs the same exploration grid several ways — in-process serial, spawn-based
+process pool, and split into 2 and 3 shard manifests executed in isolated
+sessions whose JSONL stores are merged back with `ResultStore.merge` — and
+asserts inline that every runtime produces the *exact* record set (content
+keys and every metric value bit-identical).  Reports points/sec per runtime
+plus the streaming path: an early-stopping `run_async` sweep in
+`order="nearest-arch"`.
+
+Quick mode sweeps 3 workloads x 7 iso-area architectures at reduced GA
+budget; --full uses the whole `bench_exploration` grid.
+"""
+from __future__ import annotations
+
+import gc
+import os
+import tempfile
+import time
+
+from repro.api import (BudgetPolicy, DesignSpace, ExplorationSession,
+                       GAConfig, ResultStore, build_manifest, run_shard)
+from repro.configs.paper_workloads import EXPLORATION_WORKLOADS
+from repro.hw.catalog import EXPLORATION_ARCHITECTURES
+
+SHARD_COUNTS = (2, 3)
+
+
+def _record_set(records) -> set:
+    return {(r.key, r.latency_cc, r.energy_pj, r.edp, r.peak_mem_bytes,
+             r.allocation) for r in records}
+
+
+def run(report=print, full: bool = False, seed: int = 0,
+        workers: int = 0) -> dict:
+    pop, gens = (24, 16) if full else (10, 6)
+    names = list(EXPLORATION_WORKLOADS) if full \
+        else ["fsrcnn", "squeezenet", "mobilenetv2"]
+    space = DesignSpace(
+        workloads={n: EXPLORATION_WORKLOADS[n] for n in names},
+        archs=EXPLORATION_ARCHITECTURES,
+        granularities=["layer", ("tile", 32, 1)],
+        ga=GAConfig(pop_size=pop, generations=gens, seed=seed),
+    )
+    n_workers = workers or min(4, os.cpu_count() or 1)
+    report("== sweep runtime: serial vs pooled vs sharded ==")
+    report(f"grid: {space!r} ({len(space)} points); pool/shard "
+           f"workers: {n_workers}")
+    results: dict[tuple, dict] = {}
+
+    def timed(label: str, fn):
+        gc.collect()
+        t0 = time.perf_counter()
+        out = fn()
+        wall = time.perf_counter() - t0
+        n = len(out)
+        results[("runtime", label)] = dict(
+            points=n, wall_s=wall, points_per_sec=n / max(wall, 1e-9))
+        report(f"{label:16s} {n:4d} points in {wall:6.2f}s "
+               f"({n / max(wall, 1e-9):6.2f} points/s)")
+        return out
+
+    serial = timed("serial", lambda: ExplorationSession().run(space).records)
+
+    pooled = timed(f"process x{n_workers}", lambda: ExplorationSession().run(
+        space, executor="process", max_workers=n_workers).records)
+
+    manifest = build_manifest(space)
+
+    def sharded(n_shards):
+        with tempfile.TemporaryDirectory() as td:
+            dirs = []
+            for k in range(n_shards):
+                shard_dir = os.path.join(td, f"shard{k}")
+                run_shard(manifest, cache_dir=shard_dir, shard=(k, n_shards))
+                dirs.append(shard_dir)
+            return ResultStore.merge(*dirs).values()
+
+    merged = {n: timed(f"{n}-shard merged", lambda n=n: sharded(n))
+              for n in SHARD_COUNTS}
+
+    # ---- inline bit-identity: every runtime, one record set --------------
+    ref = _record_set(serial)
+    assert _record_set(pooled) == ref, \
+        "process-pool records diverge from serial"
+    for n, records in merged.items():
+        assert _record_set(records) == ref, \
+            f"{n}-shard merged store diverges from serial"
+    report(f"bit-identity: serial == process x{n_workers} == "
+           + " == ".join(f"{n}-shard merged" for n in SHARD_COUNTS)
+           + f" ({len(ref)} records)")
+    results[("runtime", "identity")] = dict(
+        identical=True, points=len(ref), shard_counts=list(SHARD_COUNTS))
+
+    # ---- streaming: nearest-arch walk + early stop -----------------------
+    gc.collect()
+    budget = max(4, len(space) // 4)
+    policy = BudgetPolicy(max_records=budget)
+    t0 = time.perf_counter()
+    streamed = list(ExplorationSession().run_async(
+        space, order="nearest-arch", policies=[policy]))
+    wall = time.perf_counter() - t0
+    assert len(streamed) == budget
+    assert _record_set(streamed) <= ref, "streamed records diverge"
+    report(f"run_async[nearest-arch] stopped after {len(streamed)}/"
+           f"{len(space)} points ({policy.reason}) in {wall:.2f}s")
+    results[("runtime", "run_async")] = dict(
+        streamed=len(streamed), budget=budget, wall_s=wall,
+        stop_reason=policy.reason)
+    best = min(r.edp for r in serial)
+    results[("runtime", "best")] = dict(edp=best)
+    report(f"best EDP over the grid: {best:.4e}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    run(full="--full" in sys.argv)

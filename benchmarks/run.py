@@ -15,6 +15,7 @@ from __future__ import annotations
 import argparse
 import importlib
 import json
+import sys
 import time
 
 
@@ -55,6 +56,9 @@ BENCHES = [
     ("exploration_chiplets", "exploration: chiplet partitions (topology axis)",
      "benchmarks.bench_exploration_chiplets",
      lambda a: {"full": a.full, "workers": a.workers}),
+    ("sweep_runtime", "sweep runtime: serial vs pooled vs sharded executors",
+     "benchmarks.bench_sweep_runtime",
+     lambda a: {"full": a.full, "workers": a.workers}),
     ("kernels", "kernels (Pallas blocks)",
      "benchmarks.bench_kernels", lambda a: {}),
     ("pipeline_plan", "pipeline planner (beyond-paper)",
@@ -70,7 +74,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
-                    help="comma-separated bench slugs/names (substring match)")
+                    help="comma-separated bench slugs/names (substring match); "
+                         "a token matching nothing is an error")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registered bench slugs and exit")
     ap.add_argument("--workers", type=int, default=0,
                     help="exploration sweep: process-executor worker count "
                          "(0 = in-process serial)")
@@ -78,23 +85,36 @@ def main() -> None:
                     help="skip writing BENCH_<slug>.json files")
     args = ap.parse_args()
 
+    if args.list:
+        width = max(len(b[0]) for b in BENCHES)
+        for slug, name, _, _ in BENCHES:
+            print(f"{slug:{width}s}  {name}")
+        return
+
     t00 = time.perf_counter()
     failures = []
     only = [t.strip() for t in args.only.split(",") if t.strip()]
     slugs = {b[0] for b in BENCHES}
 
-    def _selected(slug: str, name: str) -> bool:
-        if not only:
+    def _matches(t: str, slug: str, name: str) -> bool:
+        if t == slug:
             return True
-        for t in only:
-            if t == slug:
-                return True
-            # substring match, but a token naming an exact slug never
-            # spills onto other benches ('exploration' vs 'granularity
-            # co-exploration')
-            if t not in slugs and (t in name or t in slug):
-                return True
-        return False
+        # substring match, but a token naming an exact slug never
+        # spills onto other benches ('exploration' vs 'granularity
+        # co-exploration')
+        return t not in slugs and (t in name or t in slug)
+
+    def _selected(slug: str, name: str) -> bool:
+        return not only or any(_matches(t, slug, name) for t in only)
+
+    # a typo'd slug must fail loudly, not silently run zero benches
+    unmatched = [t for t in only
+                 if not any(_matches(t, slug, name)
+                            for slug, name, _, _ in BENCHES)]
+    if unmatched:
+        sys.exit(f"error: --only token(s) {unmatched} match no bench; "
+                 f"registered slugs: {', '.join(b[0] for b in BENCHES)} "
+                 "(see --list)")
 
     for slug, name, module, kwargs_of in BENCHES:
         if not _selected(slug, name):

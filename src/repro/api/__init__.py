@@ -9,19 +9,32 @@
 persistent content-keyed result store.  The legacy one-call API
 (`repro.core.explore`) is a thin wrapper over a default session.
 
+The distributed sweep runtime rides on the same pieces: `build_manifest` /
+`shard` freeze a space into self-contained JSON shard manifests,
+`run_shard` executes one on any machine, `ResultStore.merge` /
+`merge_stores` fold the per-shard stores back into the serial run's exact
+record set, and `ExplorationSession.run_async` streams records through
+`StopPolicy` objects (`BudgetPolicy`, `PlateauPolicy`,
+`ParetoStagnationPolicy`, `TargetMetricPolicy`) for early-stopping sweeps.
+
 `DEFAULT_GRANULARITIES` (re-exported from `repro.api.session`) is the
 granularity axis used by `ExplorationSession.explore_granularity` when none
 is given: whole layers plus 8/16/32/64 row-band tilings.
 """
 from repro.api.archspec import ArchSpec, CoreSpec, as_arch_spec, catalog_specs
 from repro.api.designspace import DesignPoint, DesignSpace, GAConfig, \
-    fits_weights_on_chip, granularity_label, max_clusters, max_cores, \
-    min_act_mem
+    arch_spec_similarity, fits_weights_on_chip, granularity_label, \
+    max_clusters, max_cores, min_act_mem, nearest_arch_chain, order_points
 from repro.api.session import (DEFAULT_GRANULARITIES, ExplorationRecord,
                                ExplorationSession, FifoCache,
-                               GranularitySweep, ResultStore, SweepResult,
+                               GranularitySweep, ProcessExecutor, ResultStore,
+                               SerialExecutor, SweepExecutor, SweepResult,
                                best_record, default_session, pareto_records,
                                pivot_records)
+from repro.api.policies import (BudgetPolicy, ParetoStagnationPolicy,
+                                PlateauPolicy, StopPolicy, TargetMetricPolicy)
+from repro.api.distributed import (SweepManifest, build_manifest,
+                                   merge_stores, run_shard, shard)
 from repro.hw.topology import (ClusterSpec, LinkSpec, TopologySpec,
                                partition_topology)
 
@@ -30,7 +43,12 @@ __all__ = [
     "TopologySpec", "ClusterSpec", "LinkSpec", "partition_topology",
     "DesignPoint", "DesignSpace", "GAConfig", "granularity_label",
     "min_act_mem", "max_cores", "max_clusters", "fits_weights_on_chip",
+    "arch_spec_similarity", "nearest_arch_chain", "order_points",
     "ExplorationSession", "ExplorationRecord", "SweepResult",
     "GranularitySweep", "ResultStore", "FifoCache", "DEFAULT_GRANULARITIES",
+    "SweepExecutor", "SerialExecutor", "ProcessExecutor",
+    "StopPolicy", "BudgetPolicy", "PlateauPolicy", "ParetoStagnationPolicy",
+    "TargetMetricPolicy",
+    "SweepManifest", "build_manifest", "shard", "run_shard", "merge_stores",
     "best_record", "pareto_records", "pivot_records", "default_session",
 ]

@@ -52,6 +52,26 @@ def _granularity_jsonable(granularity):
     return granularity
 
 
+def granularity_from_jsonable(granularity):
+    """Inverse of the JSON form used in point specs and shard manifests.
+
+    Lists become tuples and per-layer dict keys become layer ids again, so
+    a rebuilt `DesignPoint` hashes to the same content key as the original.
+
+        >>> granularity_from_jsonable(["tile", 32, 1])
+        ('tile', 32, 1)
+        >>> granularity_from_jsonable({"0": "layer", "1": ["tile", 8]})
+        {0: 'layer', 1: ('tile', 8)}
+    """
+    if isinstance(granularity, list):
+        return tuple(granularity)
+    if isinstance(granularity, Mapping):
+        return {int(k) if str(k).lstrip("-").isdigit() else k:
+                granularity_from_jsonable(v)
+                for k, v in granularity.items()}
+    return granularity
+
+
 @dataclasses.dataclass(frozen=True)
 class GAConfig:
     """Budget/seed of the genetic layer-core allocator for one point.
@@ -125,6 +145,33 @@ class DesignPoint:
         """Identity of the *result*: identical keys => identical metrics
         (the whole pipeline is deterministic at a fixed GA seed)."""
         return hashlib.sha256(self._spec_blob().encode()).hexdigest()[:24]
+
+    @classmethod
+    def from_spec(cls, spec: Mapping, workload: Workload) -> "DesignPoint":
+        """Rebuild a point from its `spec_dict()` plus the workload DAG.
+
+        The spec carries everything except the workload itself (only its
+        name and content digest), so shard manifests ship the DAG separately
+        — `repro.api.distributed.SweepManifest` pairs the two and verifies
+        the rebuilt point hashes to the stored content key.
+
+            >>> from repro.configs.paper_workloads import fsrcnn
+            >>> from repro.hw.catalog import sc_tpu
+            >>> p = DesignPoint(workload_name="fsrcnn", workload=fsrcnn(),
+            ...                 arch=as_arch_spec(sc_tpu()),
+            ...                 granularity=("tile", 8, 1))
+            >>> q = DesignPoint.from_spec(p.spec_dict(), fsrcnn())
+            >>> q.content_key() == p.content_key()
+            True
+        """
+        return cls(
+            workload_name=str(spec["workload"]),
+            workload=workload,
+            arch=ArchSpec.from_dict(spec["arch"]),
+            granularity=granularity_from_jsonable(spec["granularity"]),
+            objective=str(spec["objective"]),
+            priority=str(spec["priority"]),
+            ga=GAConfig(**spec["ga"]))
 
 
 # constraint predicates receive the DesignPoint; helpers below build common ones
@@ -311,3 +358,107 @@ class DesignSpace:
                 f"{len(self.priorities)} priorities"
                 + (f", {len(self.constraints)} constraints" if self.constraints
                    else "") + ")")
+
+
+# ---------------------------------------------------------------------------
+# sweep ordering: nearest-neighbor traversal of the architecture grid
+# ---------------------------------------------------------------------------
+
+POINT_ORDERS = ("declared", "nearest-arch")
+
+
+def arch_spec_similarity(a: Mapping, b: Mapping) -> int:
+    """Similarity score between two `ArchSpec.to_dict()` forms.
+
+    The spec distance *is* the grid distance: +2 for an equal core count,
+    +1 per slot whose core spec matches exactly, +1 per matching
+    interconnect parameter (bus/DRAM bandwidth and energy, comm style).
+    This single ranking backs both the store-backed GA warm starts
+    (neighbor selection) and the `order="nearest-arch"` sweep traversal,
+    so the walk visits exactly the neighborhoods the warm starts feed on.
+
+        >>> from repro.hw.catalog import mc_hom_tpu, mc_hom_eye, sc_tpu
+        >>> hom = as_arch_spec(mc_hom_tpu()).to_dict()
+        >>> eye = as_arch_spec(mc_hom_eye()).to_dict()
+        >>> sc = as_arch_spec(sc_tpu()).to_dict()
+        >>> arch_spec_similarity(hom, hom) > arch_spec_similarity(hom, eye)
+        True
+        >>> arch_spec_similarity(hom, eye) > arch_spec_similarity(hom, sc)
+        True
+    """
+    score = 0
+    cores_a, cores_b = a.get("cores", []), b.get("cores", [])
+    if len(cores_a) == len(cores_b):
+        score += 2
+        score += sum(1 for x, y in zip(cores_a, cores_b) if x == y)
+    for field in ("bus_bw_bits_per_cc", "bus_energy_pj_per_bit",
+                  "dram_bw_bits_per_cc", "dram_energy_pj_per_bit",
+                  "comm_style"):
+        if a.get(field) == b.get(field):
+            score += 1
+    return score
+
+
+def nearest_arch_chain(archs: Sequence[ArchSpec]) -> list[int]:
+    """Greedy nearest-neighbor traversal order over unique architectures.
+
+    Starts at the first declared arch and repeatedly hops to the most
+    similar unvisited one (`arch_spec_similarity`; ties break on declared
+    order), returning index positions into `archs`. Deterministic: a pure
+    function of the spec contents and their declared order.
+
+        >>> from repro.hw.catalog import mc_hetero, mc_hom_tpu, sc_tpu
+        >>> specs = [as_arch_spec(a()) for a in (sc_tpu, mc_hetero,
+        ...                                      mc_hom_tpu)]
+        >>> nearest_arch_chain(specs)   # 5-core MC:* pair stays adjacent
+        [0, 1, 2]
+    """
+    dicts = [a.to_dict() for a in archs]
+    n = len(dicts)
+    if n == 0:
+        return []
+    chain, visited = [0], [True] + [False] * (n - 1)
+    while len(chain) < n:
+        cur = dicts[chain[-1]]
+        best, best_score = -1, -1
+        for j in range(n):
+            if not visited[j]:
+                s = arch_spec_similarity(cur, dicts[j])
+                if s > best_score:
+                    best, best_score = j, s
+        visited[best] = True
+        chain.append(best)
+    return chain
+
+
+def order_points(points: Iterable[DesignPoint],
+                 order: str = "declared") -> list[DesignPoint]:
+    """Walk order of a sweep: `"declared"` (as enumerated) or
+    `"nearest-arch"` (architecture-major, architectures chained by spec
+    similarity so consecutive points stay in neighboring grid regions —
+    the traversal that makes store-backed GA warm starts hit).
+
+        >>> from repro.hw.catalog import EXPLORATION_ARCHITECTURES
+        >>> space = DesignSpace(workloads=["fsrcnn"],
+        ...                     archs=EXPLORATION_ARCHITECTURES,
+        ...                     granularities=["layer"])
+        >>> walk = order_points(space, "nearest-arch")
+        >>> sorted(p.arch.name for p in walk) == \\
+        ...     sorted(p.arch.name for p in space)
+        True
+        >>> [p.arch.name for p in walk][:2]     # SC:TPU's nearest: SC:Eye
+        ['SC:TPU', 'SC:Eye']
+    """
+    points = list(points)
+    if order == "declared":
+        return points
+    if order != "nearest-arch":
+        raise ValueError(f"unknown order {order!r} "
+                         f"(expected one of {POINT_ORDERS})")
+    unique: dict[str, ArchSpec] = {}
+    for p in points:
+        unique.setdefault(p.arch.content_key(), p.arch)
+    keys, specs = list(unique), list(unique.values())
+    chain = nearest_arch_chain(specs)
+    rank = {keys[idx]: pos for pos, idx in enumerate(chain)}
+    return sorted(points, key=lambda p: rank[p.arch.content_key()])

@@ -20,12 +20,13 @@ import multiprocessing
 import os
 import time
 from concurrent.futures import ProcessPoolExecutor
-from typing import Callable, Iterable, Mapping, Sequence
+from typing import Callable, Iterable, Iterator, Mapping, Sequence
 
 import numpy as np
 
 from repro.api.archspec import ArchSpec
-from repro.api.designspace import DesignPoint, DesignSpace, granularity_label
+from repro.api.designspace import DesignPoint, DesignSpace, \
+    arch_spec_similarity, granularity_label, order_points
 from repro.core.allocator import feasible_cores_per_layer
 from repro.core.cn import identify_cns
 from repro.core.costmodel import CostModel
@@ -290,25 +291,38 @@ class GranularitySweep:
 
 @dataclasses.dataclass
 class SweepResult:
-    """Outcome of `ExplorationSession.run`: records in point order plus
-    scheduling accounting (how many points actually ran vs store hits).
+    """Outcome of `ExplorationSession.run`: records in walk order plus
+    scheduling accounting (how many points actually ran vs store hits,
+    warm-start hits, and why the sweep stopped, if a policy fired).
 
     `best`/`pareto`/`pivot` delegate to the module-level query helpers
     over this sweep's records; see the `ExplorationSession` doctest for an
     end-to-end example.
 
         >>> sweep = SweepResult(records=_demo_records(), n_scheduled=3,
-        ...                     n_from_store=0, wall_s=0.0)
+        ...                     n_from_store=0, wall_s=0.0, n_warm_started=1)
         >>> sweep.best("edp").key, len(sweep)
         ('a', 3)
         >>> [r.key for r in sweep.pareto()]
         ['a', 'b']
+        >>> round(sweep.warm_start_hit_rate, 2), sweep.stop_reason
+        (0.33, None)
     """
 
     records: list[ExplorationRecord]
     n_scheduled: int
     n_from_store: int
     wall_s: float
+    n_warm_started: int = 0   # scheduled points whose GA got >=1 warm seed
+    n_cancelled: int = 0      # planned points never delivered (early stop)
+    stop_reason: str | None = None   # the firing StopPolicy's reason
+
+    @property
+    def warm_start_hit_rate(self) -> float:
+        """Fraction of scheduled points whose GA was seeded from the store
+        (0.0 when nothing was scheduled or warm starts were off)."""
+        return self.n_warm_started / self.n_scheduled if self.n_scheduled \
+            else 0.0
 
     def best(self, metric: str = "edp") -> ExplorationRecord:
         return best_record(self.records, metric)
@@ -331,7 +345,9 @@ class ResultStore:
     With a `cache_dir` every record is appended to `records.jsonl` as it
     arrives and reloaded on construction (last write wins), making repeated
     sweeps incremental across processes and sessions; with `cache_dir=None`
-    the store is memory-only and lives as long as the session.
+    the store is memory-only and lives as long as the session.  A
+    `cache_dir` ending in ``.jsonl`` is taken as the store file itself
+    (shard stores are often addressed by file).
 
         >>> store = ResultStore()                   # memory-only
         >>> rec = _demo_records()[0]
@@ -344,6 +360,20 @@ class ResultStore:
 
     FILENAME = "records.jsonl"
 
+    @staticmethod
+    def resolve_path(store: str) -> str:
+        """The ``records.jsonl`` location behind a store address — either a
+        ``.jsonl`` file path (used verbatim) or a store directory.
+
+            >>> ResultStore.resolve_path("shard0")
+            'shard0/records.jsonl'
+            >>> ResultStore.resolve_path("direct/recs.jsonl")
+            'direct/recs.jsonl'
+        """
+        store = str(store)
+        return store if store.endswith(".jsonl") \
+            else os.path.join(store, ResultStore.FILENAME)
+
     def __init__(self, cache_dir: str | None = None):
         self._records: dict[str, ExplorationRecord] = {}
         # per-workload view of the same records (warm-start lookups are
@@ -351,8 +381,10 @@ class ResultStore:
         self._by_workload: dict[str, dict[str, ExplorationRecord]] = {}
         self.path: str | None = None
         if cache_dir is not None:
-            os.makedirs(cache_dir, exist_ok=True)
-            self.path = os.path.join(cache_dir, self.FILENAME)
+            self.path = self.resolve_path(cache_dir)
+            parent = os.path.dirname(self.path)
+            if parent:
+                os.makedirs(parent, exist_ok=True)
             if os.path.exists(self.path):
                 with open(self.path) as f:
                     for line in f:
@@ -391,6 +423,44 @@ class ResultStore:
     def __contains__(self, key: str) -> bool:
         return key in self._records
 
+    @classmethod
+    def merge(cls, *stores: "ResultStore | str",
+              cache_dir: str | None = None) -> "ResultStore":
+        """Concatenate stores, deduplicating by content key (first wins).
+
+        Records are content-keyed — identical keys promise identical
+        metrics — so merging is pure concatenation + dedup: the N-shard
+        output of a partitioned sweep merges into exactly the serial run's
+        record set.  The merge is idempotent (re-merging a shard adds
+        nothing) and commutative as a record set.  Sources may be
+        `ResultStore`s or paths (directories holding ``records.jsonl``, or
+        ``.jsonl`` files directly) — a path without a store file is a
+        `FileNotFoundError`, never a silently empty contribution;
+        `cache_dir` persists the merged store.
+
+            >>> a, b = ResultStore(), ResultStore()
+            >>> r0, r1, _ = _demo_records()
+            >>> a.put(r0), b.put(r0), b.put(r1)     # r0 lands in both
+            (None, None, None)
+            >>> sorted(r.key for r in ResultStore.merge(a, b).values())
+            ['a', 'b']
+            >>> len(ResultStore.merge(a, b, b)) == len(ResultStore.merge(b, a))
+            True
+        """
+        for src in stores:
+            if not isinstance(src, ResultStore) \
+                    and not os.path.exists(cls.resolve_path(src)):
+                raise FileNotFoundError(
+                    f"no shard store at {cls.resolve_path(src)}")
+        out = cls(cache_dir)
+        for src in stores:
+            if not isinstance(src, ResultStore):
+                src = cls(str(src))
+            for rec in src.values():
+                if rec.key not in out:
+                    out.put(dataclasses.replace(rec, from_store=False))
+        return out
+
 
 # ---------------------------------------------------------------------------
 # process-pool worker: rebuilds engines from the picklable point spec in a
@@ -407,6 +477,119 @@ def _process_worker(job: "tuple[DesignPoint, tuple]") -> dict:
     return _WORKER_SESSION._compute_record(
         point, initial_allocations=[np.array(a, dtype=np.int64)
                                     for a in warm]).to_dict()
+
+
+# ---------------------------------------------------------------------------
+# sweep executors: the protocol shared by the serial, process-pool, and shard
+# backends (`repro.api.distributed` runs shards through these same classes)
+# ---------------------------------------------------------------------------
+
+class SweepExecutor:
+    """Backend protocol of `ExplorationSession.run`/`run_async`.
+
+    `stream(points, warm_lookup)` yields exactly one `ExplorationRecord`
+    per point **in submission order** — the determinism contract that makes
+    streamed sweeps, early stops, and shard merges reproduce the serial
+    record sequence bit-for-bit regardless of how the work was overlapped.
+    `cancel()` drops everything not yet yielded (outstanding work may still
+    burn cycles, but its records never land in the store)."""
+
+    def stream(self, points: "Sequence[DesignPoint]",
+               warm_lookup: Callable[["DesignPoint"], Sequence],
+               ) -> Iterator[ExplorationRecord]:
+        raise NotImplementedError
+
+    def cancel(self) -> None:  # pragma: no cover - overridden or no-op
+        pass
+
+
+class SerialExecutor(SweepExecutor):
+    """In-process backend: computes each point when the consumer pulls it.
+
+    Warm starts are resolved lazily, point by point, so later points in one
+    sweep see the records of earlier ones (the behavior the nearest-arch
+    walk is designed around).
+
+        >>> from repro.api.designspace import DesignSpace, GAConfig
+        >>> from repro.hw.catalog import sc_tpu
+        >>> space = DesignSpace(workloads=["fsrcnn"], archs={"SC:TPU": sc_tpu},
+        ...                     granularities=["layer"],
+        ...                     ga=GAConfig(pop_size=4, generations=2))
+        >>> ex = SerialExecutor(ExplorationSession())
+        >>> [r.granularity for r in ex.stream(list(space), lambda p: ())]
+        ['layer']
+    """
+
+    def __init__(self, session: "ExplorationSession"):
+        self.session = session
+        self._cancelled = False
+
+    def stream(self, points, warm_lookup):
+        self._cancelled = False     # re-arm: executors are reusable
+        for point in points:
+            if self._cancelled:
+                return
+            yield self.session._compute_record(
+                point, initial_allocations=warm_lookup(point))
+
+    def cancel(self) -> None:
+        self._cancelled = True
+
+
+class ProcessExecutor(SweepExecutor):
+    """Spawn-based process-pool backend.
+
+    All points are submitted up-front (warm starts therefore resolve
+    against the pre-existing store only — workers have no store) and
+    records are yielded in submission order, so the stream is bit-identical
+    to `SerialExecutor`'s while computation overlaps across workers.
+    `cancel()` abandons unfinished futures; their results are discarded
+    even if a worker was already computing them, keeping the ingested
+    record set deterministic at record granularity."""
+
+    def __init__(self, max_workers: int | None = None):
+        self.max_workers = max_workers or os.cpu_count() or 1
+        self._pool: ProcessPoolExecutor | None = None
+        self._cancelled = False
+
+    def stream(self, points, warm_lookup):
+        self._cancelled = False     # re-arm: executors are reusable
+        self._pool = None
+        if not points:
+            return
+        jobs = [(p, tuple(tuple(int(x) for x in a) for a in warm_lookup(p)))
+                for p in points]
+        # spawn, not fork: callers routinely have jax (multithreaded)
+        # imported, and forking a threaded process can deadlock
+        ctx = multiprocessing.get_context("spawn")
+        self._pool = ProcessPoolExecutor(max_workers=self.max_workers,
+                                         mp_context=ctx)
+        try:
+            futures = [self._pool.submit(_process_worker, job) for job in jobs]
+            for future in futures:
+                if self._cancelled:
+                    return
+                yield ExplorationRecord.from_dict(future.result())
+        finally:
+            self._pool.shutdown(wait=not self._cancelled,
+                                cancel_futures=self._cancelled)
+
+    def cancel(self) -> None:
+        self._cancelled = True
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+@dataclasses.dataclass
+class _SweepState:
+    """Shared accounting between a sweep's record stream and its summary."""
+
+    todo: list
+    planned_store_hits: int          # store hits in the walk plan
+    store_hits: int = 0              # store hits actually delivered
+    n_computed: int = 0
+    n_warm_started: int = 0
+    stop_reason: str | None = None
 
 
 class ExplorationSession:
@@ -643,7 +826,8 @@ class ExplorationSession:
 
         Neighbors are records of the *same workload* whose allocation is
         feasible on this point's architecture, ranked by architecture
-        similarity (same core count, per-slot matching core specs, same
+        similarity (`repro.api.designspace.arch_spec_similarity` — the same
+        ranking that drives the `order="nearest-arch"` walk — plus matching
         granularity/priority) and then by their own objective value — the
         ROADMAP's "nearby arch in the grid" without needing an explicit
         grid: the spec distance is the grid distance. Returns at most
@@ -656,15 +840,10 @@ class ExplorationSession:
                      feasible_cores_per_layer(workload, accelerator)]
         self_key = point.content_key()
         target_arch = point.arch.to_dict()
-        target_cores = target_arch.get("cores", [])
 
         def similarity(r: ExplorationRecord) -> int:
             arch = (r.spec or {}).get("arch") or {}
-            cores = arch.get("cores", [])
-            s = 0
-            if len(cores) == len(target_cores):
-                s += 2
-                s += sum(1 for a, b in zip(cores, target_cores) if a == b)
+            s = arch_spec_similarity(arch, target_arch)
             if r.granularity == point.granularity_label:
                 s += 1
             if r.priority == point.priority:
@@ -716,37 +895,31 @@ class ExplorationSession:
             spec=point.spec_dict(),
             ga_warm_starts=len(initial_allocations))
 
-    def run(
-        self,
-        space: "DesignSpace | Iterable[DesignPoint]",
-        executor: str = "serial",          # 'serial' | 'process'
-        max_workers: int | None = None,
-        progress: Callable[[ExplorationRecord], None] | None = None,
-        warm_start: bool | None = None,
-    ) -> SweepResult:
-        """Walk a design space; store hits are served without scheduling.
+    def _make_executor(self, executor: "str | SweepExecutor",
+                       max_workers: int | None) -> SweepExecutor:
+        if isinstance(executor, SweepExecutor):
+            return executor
+        if executor == "serial":
+            return SerialExecutor(self)
+        if executor == "process":
+            return ProcessExecutor(max_workers or self.max_workers)
+        raise ValueError(f"unknown executor {executor!r} "
+                         "(expected 'serial' or 'process')")
 
-        Without warm starts, both executors produce bit-identical metrics
-        for every point (the pipeline is deterministic at a fixed GA seed);
-        'process' fans the *new* points out to worker processes that rebuild
-        engines locally from the picklable point specs.
-
-        `warm_start` (default: the session's setting) seeds each point's GA
-        with the best stored allocations of neighboring points. The serial
-        executor looks neighbors up as points complete, so later points in
-        one sweep benefit from earlier ones; the process executor resolves
-        warm starts up-front from the pre-existing store (workers have no
-        store) and ships them with the point."""
-        t0 = time.perf_counter()
-        points = list(space)
-        order: list[str] = []
+    def _start_sweep(self, space, executor, max_workers, warm_start, order,
+                     policies, progress,
+                     ) -> "tuple[_SweepState, Iterator[ExplorationRecord]]":
+        """Build the walk order, split store hits from new work, and return
+        the (accounting, record stream) pair `run`/`run_async` share."""
+        points = order_points(space, order)
+        walk: list[str] = []
         served: dict[str, ExplorationRecord] = {}
         todo: list[DesignPoint] = []
         queued: set[str] = set()
         store_hits = 0
         for p in points:
             key = p.content_key()
-            order.append(key)
+            walk.append(key)
             if key in served or key in queued:
                 continue  # duplicate point within this run
             hit = self.store.get(key)
@@ -756,39 +929,138 @@ class ExplorationSession:
             else:
                 todo.append(p)
                 queued.add(key)
-
-        def _ingest(rec: ExplorationRecord) -> None:
-            self.store.put(rec)
-            served[rec.key] = rec
-            if progress is not None:
-                progress(rec)
-
+        state = _SweepState(todo=todo, planned_store_hits=store_hits)
         warm = self.warm_start if warm_start is None else warm_start
-        if executor == "serial":
-            for p in todo:
-                inits = self.warm_start_allocations(p) if warm else ()
-                _ingest(self._compute_record(p, initial_allocations=inits))
-        elif executor == "process":
-            workers = max_workers or self.max_workers or os.cpu_count() or 1
-            if todo:
-                jobs = [(p, tuple(tuple(int(x) for x in a) for a in
-                                  (self.warm_start_allocations(p) if warm
-                                   else ())))
-                        for p in todo]
-                # spawn, not fork: callers routinely have jax (multithreaded)
-                # imported, and forking a threaded process can deadlock
-                ctx = multiprocessing.get_context("spawn")
-                with ProcessPoolExecutor(max_workers=workers,
-                                         mp_context=ctx) as pool:
-                    for rec_dict in pool.map(_process_worker, jobs):
-                        _ingest(ExplorationRecord.from_dict(rec_dict))
-        else:
-            raise ValueError(f"unknown executor {executor!r} "
-                             "(expected 'serial' or 'process')")
-        return SweepResult(records=[served[k] for k in order],
-                           n_scheduled=len(todo),
-                           n_from_store=store_hits,
-                           wall_s=time.perf_counter() - t0)
+        backend = self._make_executor(executor, max_workers)
+        for policy in policies:   # re-arm like the executors: policies are
+            reset = getattr(policy, "reset", None)   # reusable across sweeps
+            if callable(reset):
+                reset()
+
+        def warm_lookup(p: DesignPoint):
+            return self.warm_start_allocations(p) if warm else ()
+
+        def stream() -> Iterator[ExplorationRecord]:
+            computed = backend.stream(todo, warm_lookup)
+            delivered_hits: set[str] = set()
+            try:
+                for key in walk:
+                    rec = served.get(key)
+                    if rec is None:
+                        rec = next(computed)
+                        if rec.key != key:  # executor broke submission order
+                            raise RuntimeError(
+                                f"executor yielded record {rec.key} at walk "
+                                f"position expecting {key}")
+                        self.store.put(rec)
+                        served[key] = rec
+                        state.n_computed += 1
+                        if rec.ga_warm_starts:
+                            state.n_warm_started += 1
+                        if progress is not None:
+                            progress(rec)
+                    elif rec.from_store and key not in delivered_hits:
+                        # count store hits as they are *delivered*, so an
+                        # early stop does not claim undelivered ones
+                        delivered_hits.add(key)
+                        state.store_hits += 1
+                    yield rec
+                    for policy in policies:
+                        if policy.update(rec):
+                            state.stop_reason = getattr(
+                                policy, "reason", None) or type(policy).__name__
+                            return
+            finally:
+                backend.cancel()
+                if hasattr(computed, "close"):
+                    computed.close()
+
+        return state, stream()
+
+    def run(
+        self,
+        space: "DesignSpace | Iterable[DesignPoint]",
+        executor: "str | SweepExecutor" = "serial",  # 'serial' | 'process'
+        max_workers: int | None = None,
+        progress: Callable[[ExplorationRecord], None] | None = None,
+        warm_start: bool | None = None,
+        order: str = "declared",           # 'declared' | 'nearest-arch'
+        policies: Sequence = (),
+    ) -> SweepResult:
+        """Walk a design space; store hits are served without scheduling.
+
+        Without warm starts, both executors produce bit-identical metrics
+        for every point (the pipeline is deterministic at a fixed GA seed);
+        'process' fans the *new* points out to worker processes that rebuild
+        engines locally from the picklable point specs.
+
+        `order` picks the walk: `"declared"` follows the space's enumeration
+        order, `"nearest-arch"` chains architectures by spec similarity
+        (records come back in walk order either way — the record *set* is
+        identical).  `policies` are `repro.api.policies.StopPolicy` objects
+        observed after every record; the first to fire ends the sweep and
+        cancels outstanding points (see `run_async` for streaming access).
+
+        `warm_start` (default: the session's setting) seeds each point's GA
+        with the best stored allocations of neighboring points. The serial
+        executor looks neighbors up as points complete, so later points in
+        one sweep benefit from earlier ones; the process executor resolves
+        warm starts up-front from the pre-existing store (workers have no
+        store) and ships them with the point.  `SweepResult.n_warm_started`
+        / `.warm_start_hit_rate` report how many scheduled points actually
+        got seeded."""
+        t0 = time.perf_counter()
+        state, stream = self._start_sweep(space, executor, max_workers,
+                                          warm_start, order, policies,
+                                          progress)
+        records = list(stream)
+        n_cancelled = (len(state.todo) - state.n_computed) \
+            + (state.planned_store_hits - state.store_hits)
+        return SweepResult(records=records,
+                           n_scheduled=state.n_computed,
+                           n_from_store=state.store_hits,
+                           wall_s=time.perf_counter() - t0,
+                           n_warm_started=state.n_warm_started,
+                           n_cancelled=n_cancelled,
+                           stop_reason=state.stop_reason)
+
+    def run_async(
+        self,
+        space: "DesignSpace | Iterable[DesignPoint]",
+        executor: "str | SweepExecutor" = "serial",
+        max_workers: int | None = None,
+        policies: Sequence = (),
+        warm_start: bool | None = None,
+        order: str = "declared",
+        progress: Callable[[ExplorationRecord], None] | None = None,
+    ) -> Iterator[ExplorationRecord]:
+        """Streaming `run`: yields each `ExplorationRecord` as it lands.
+
+        Records arrive in walk order (store hits at their walk positions,
+        computed points as the executor delivers them in submission order),
+        so with no policies the yielded sequence equals `run(...).records`
+        bit-for-bit — while the 'process' executor still overlaps the
+        computation across workers.  After each yielded record every
+        `StopPolicy` in `policies` is consulted; the first to fire cancels
+        all outstanding points deterministically at record granularity
+        (cancelled work never reaches the store).  Closing the generator
+        early (``break``) cancels the same way.
+
+            >>> from repro.api.designspace import DesignSpace, GAConfig
+            >>> from repro.hw.catalog import sc_tpu
+            >>> space = DesignSpace(workloads=["fsrcnn"],
+            ...                     archs={"SC:TPU": sc_tpu},
+            ...                     granularities=["layer", ("tile", 8, 1)],
+            ...                     ga=GAConfig(pop_size=4, generations=2))
+            >>> stream = ExplorationSession().run_async(space)
+            >>> first = next(stream)
+            >>> first.granularity, first.from_store
+            ('layer', False)
+            >>> stream.close()                  # cancels the rest
+        """
+        _, stream = self._start_sweep(space, executor, max_workers,
+                                      warm_start, order, policies, progress)
+        return stream
 
     # ---- queries over everything this session has seen -------------------
     def records(self) -> list[ExplorationRecord]:

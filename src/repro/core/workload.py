@@ -150,6 +150,29 @@ class Workload:
              tuple(l.inputs), l.bits)
             for l in self.layers.values()))
 
+    # ---- serialization (shard manifests ship workloads as pure data) ---------
+    def to_dict(self) -> dict:
+        """JSON-ready DAG description; `from_dict` round-trips it exactly
+        (`cache_key()` is preserved, so content keys survive the trip)."""
+        return {"name": self.name, "layers": [
+            {"name": l.name, "op": l.op, "dims": dict(l.dims),
+             "stride": l.stride, "padding": l.padding,
+             "inputs": list(l.inputs), "bits": l.bits}
+            for l in self.layers.values()]}
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "Workload":
+        """Rebuild a workload from `to_dict` output (layer ids are assigned
+        in list order, matching the original append order)."""
+        w = cls(str(data["name"]))
+        for l in data["layers"]:
+            w.add(l["name"], l["op"], {str(k): int(v)
+                                       for k, v in l["dims"].items()},
+                  stride=int(l["stride"]), padding=int(l["padding"]),
+                  inputs=tuple(int(i) for i in l["inputs"]),
+                  bits=int(l["bits"]))
+        return w
+
     @property
     def total_macs(self) -> int:
         return sum(l.macs for l in self.layers.values())

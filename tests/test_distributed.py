@@ -1,0 +1,404 @@
+"""Distributed sweep runtime: shard manifests, merge bit-identity, the
+async streaming executor with stop policies, and sweep ordering."""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import pytest
+
+from repro.api import (BudgetPolicy, DesignSpace, ExplorationSession,
+                       GAConfig, ParetoStagnationPolicy, PlateauPolicy,
+                       ResultStore, SweepManifest, TargetMetricPolicy,
+                       arch_spec_similarity, build_manifest, merge_stores,
+                       nearest_arch_chain, order_points, run_shard, shard)
+from repro.api.session import _demo_records
+from repro.configs.paper_workloads import fsrcnn, squeezenet
+from repro.core.workload import Workload
+from repro.hw.catalog import (EXPLORATION_ARCHITECTURES, mc_hetero,
+                              mc_hom_tpu, sc_eye, sc_tpu)
+
+pytestmark = pytest.mark.tier1
+
+GA = GAConfig(pop_size=4, generations=2)
+
+
+def _space(**kw):
+    base = dict(workloads={"fsrcnn": fsrcnn()},
+                archs={"SC:TPU": sc_tpu, "SC:Eye": sc_eye,
+                       "MC:HomTPU": mc_hom_tpu},
+                granularities=["layer", ("tile", 8, 1)], ga=GA)
+    base.update(kw)
+    return DesignSpace(**base)
+
+
+def _metric_set(records):
+    return {(r.key, r.latency_cc, r.energy_pj, r.edp, r.peak_mem_bytes,
+             r.allocation) for r in records}
+
+
+def _metric_seq(records):
+    return [(r.key, r.latency_cc, r.energy_pj, r.edp, r.allocation)
+            for r in records]
+
+
+# ---------------------------------------------------------------------------
+# manifests: self-contained, round-trippable, integrity-checked
+# ---------------------------------------------------------------------------
+
+def test_workload_dict_round_trip_preserves_cache_key():
+    for w in (fsrcnn(), squeezenet()):
+        assert Workload.from_dict(w.to_dict()).cache_key() == w.cache_key()
+    # survives an actual JSON trip too
+    w = squeezenet()
+    again = Workload.from_dict(json.loads(json.dumps(w.to_dict())))
+    assert again.cache_key() == w.cache_key()
+
+
+def test_manifest_round_trip_and_content_keys(tmp_path):
+    space = _space(granularities=["layer", ("tile", 8, 1),
+                                  {0: "layer", 1: ("tile", 8, 1)}])
+    m = build_manifest(space)
+    path = m.save(str(tmp_path / "sweep.json"))
+    loaded = SweepManifest.load(path)
+    points = loaded.design_points()          # content keys verified inside
+    assert [p.content_key() for p in points] == \
+           [p.content_key() for p in space]
+    assert [p.granularity for p in points] == \
+           [p.granularity for p in space]
+
+
+def test_manifest_integrity_check_rejects_tampering():
+    m = build_manifest(_space())
+    m.points[0]["spec"]["priority"] = "memory"   # spec no longer matches key
+    with pytest.raises(ValueError, match="integrity"):
+        m.design_points()
+
+
+def test_manifest_rejects_newer_version():
+    d = build_manifest(_space()).to_dict()
+    d["version"] = 99
+    with pytest.raises(ValueError, match="version"):
+        SweepManifest.from_dict(d)
+
+
+def test_shard_partition_balanced_disjoint_and_complete():
+    space = _space()
+    m = build_manifest(space)
+    for n in (2, 3, 4):
+        shards = [m.shard(n, k) for k in range(n)]
+        sizes = [len(s) for s in shards]
+        assert sum(sizes) == len(m)
+        assert max(sizes) - min(sizes) <= 1
+        keys = [p["key"] for s in shards for p in s.points]
+        assert keys == [p["key"] for p in m.points]  # order-preserving
+        # each shard only ships the workload DAGs it references
+        for s in shards:
+            assert set(s.workloads) == \
+                   {p["spec"]["workload"] for p in s.points}
+    with pytest.raises(ValueError):
+        m.shard(2, 2)
+    with pytest.raises(ValueError):
+        shards[0].shard(2, 0)                # a shard cannot be re-sharded
+
+
+# ---------------------------------------------------------------------------
+# sharded execution + merge == serial, bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_sharded_merge_bit_identical_to_serial(tmp_path, n_shards):
+    space = _space()
+    serial = ExplorationSession().run(space)
+    m = build_manifest(space)
+    dirs = []
+    for k in range(n_shards):
+        d = str(tmp_path / f"shard{k}")
+        sweep = run_shard(m, cache_dir=d, shard=(k, n_shards))
+        assert sweep.n_scheduled == len(sweep) > 0
+        dirs.append(d)
+    merged = ResultStore.merge(*dirs, cache_dir=str(tmp_path / "merged"))
+    assert _metric_set(merged.values()) == _metric_set(serial.records)
+    # the merged store is a normal store: a rerun schedules nothing
+    rerun = ExplorationSession(cache_dir=str(tmp_path / "merged")).run(space)
+    assert rerun.n_scheduled == 0 and rerun.n_from_store == len(serial)
+
+
+def test_pre_sliced_shard_manifests_cover_the_space(tmp_path):
+    space = _space()
+    serial = ExplorationSession().run(space)
+    stores = []
+    for k in range(2):
+        m = shard(space, 2, k)               # self-contained slice
+        assert m.shard_index == k and m.n_shards == 2
+        path = m.save(str(tmp_path / f"m{k}.json"))
+        d = str(tmp_path / f"s{k}")
+        run_shard(path, cache_dir=d)         # no shard= needed: pre-sliced
+        stores.append(d)
+    merged = merge_stores(None, *stores)
+    assert _metric_set(merged.values()) == _metric_set(serial.records)
+
+
+def test_merge_idempotent_and_commutative(tmp_path):
+    space = _space()
+    m = build_manifest(space)
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    run_shard(m, cache_dir=a, shard=(0, 2))
+    run_shard(m, cache_dir=b, shard=(1, 2))
+    ab = _metric_set(ResultStore.merge(a, b).values())
+    ba = _metric_set(ResultStore.merge(b, a).values())
+    abb = _metric_set(ResultStore.merge(a, b, b).values())
+    aa = _metric_set(ResultStore.merge(a, a).values())
+    assert ab == ba == abb
+    assert aa == _metric_set(ResultStore(a).values())
+
+
+def test_merge_stores_validates_sources(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        merge_stores(None, str(tmp_path / "nope"))
+    # ResultStore.merge itself rejects missing paths too (no silently
+    # empty contribution, no directory side effects)
+    with pytest.raises(FileNotFoundError):
+        ResultStore.merge(str(tmp_path / "also_nope"))
+    assert not (tmp_path / "also_nope").exists()
+    # the wrapper can opt into skipping crashed shards
+    a = str(tmp_path / "a")
+    run_shard(build_manifest(_space()), cache_dir=a, shard=(0, 2))
+    partial = merge_stores(None, a, str(tmp_path / "gone"),
+                           require_exists=False)
+    assert _metric_set(partial.values()) == _metric_set(ResultStore(a).values())
+
+
+# ---------------------------------------------------------------------------
+# async streaming executor
+# ---------------------------------------------------------------------------
+
+def test_run_async_noop_matches_run_bit_for_bit():
+    space = _space()
+    sweep = ExplorationSession().run(space)
+    streamed = list(ExplorationSession().run_async(space))
+    assert _metric_seq(streamed) == _metric_seq(sweep.records)
+    assert not any(r.from_store for r in streamed)
+
+
+def test_run_async_streams_store_hits_in_walk_order():
+    s = ExplorationSession()
+    space = _space()
+    first = s.run(space)
+    again = list(s.run_async(space))
+    assert all(r.from_store for r in again)
+    assert _metric_seq(again) == _metric_seq(first.records)
+
+
+def test_run_async_close_cancels_cleanly():
+    s = ExplorationSession()
+    stream = s.run_async(_space())
+    next(stream)
+    stream.close()
+    assert len(s.store) == 1                 # nothing past the break landed
+
+
+@pytest.mark.parametrize("policy_factory, expect", [
+    (lambda: BudgetPolicy(max_records=3), 3),
+    (lambda: BudgetPolicy(max_scheduled=2), 2),
+    (lambda: PlateauPolicy(metric="edp", patience=2), None),
+    (lambda: ParetoStagnationPolicy(patience=2), None),
+    (lambda: TargetMetricPolicy("edp", target=float("inf")), 1),
+])
+def test_each_policy_deterministic_under_fixed_seed(policy_factory, expect):
+    space = _space()
+    runs = []
+    for _ in range(2):                       # fixed GA seed: repeatable
+        pol = policy_factory()
+        recs = list(ExplorationSession().run_async(space, policies=[pol]))
+        runs.append((_metric_seq(recs), pol.reason))
+    assert runs[0] == runs[1]
+    records, reason = runs[0]
+    assert 0 < len(records) <= len(space)
+    if expect is not None:
+        assert len(records) == expect and reason is not None
+
+
+def test_policy_stop_reported_on_sweep_result():
+    sweep = ExplorationSession().run(_space(),
+                                     policies=[BudgetPolicy(max_records=2)])
+    assert len(sweep.records) == 2
+    assert sweep.n_scheduled == 2
+    assert sweep.n_cancelled == len(_space()) - 2
+    assert sweep.stop_reason == "budget: 2 records"
+
+
+def test_budget_policy_ignores_store_hits_for_scheduled():
+    s = ExplorationSession()
+    space = _space()
+    s.run(space)                             # everything stored
+    pol = BudgetPolicy(max_scheduled=1)
+    recs = list(s.run_async(space, policies=[pol]))
+    assert len(recs) == len(space)           # store hits never trip it
+    assert all(r.from_store for r in recs)
+
+
+def test_executor_instance_is_reusable_across_runs():
+    from repro.api import SerialExecutor
+    s = ExplorationSession()
+    ex = SerialExecutor(s)
+    space = _space()
+    first = s.run(space, executor=ex)       # completion cancels the backend
+    assert first.n_scheduled == len(first) > 0
+    other = _space(priorities=["memory"])   # all-new points, same executor
+    again = s.run(other, executor=ex)       # must re-arm, not yield nothing
+    assert again.n_scheduled == len(other)
+
+
+def test_early_stop_accounting_counts_only_delivered_store_hits():
+    s = ExplorationSession()
+    space = _space()
+    s.run(space)                            # everything stored
+    sweep = s.run(space, policies=[BudgetPolicy(max_records=2)])
+    assert len(sweep.records) == 2
+    assert sweep.n_from_store == 2          # only the delivered hits
+    assert sweep.n_scheduled == 0
+    assert sweep.n_cancelled == len(space) - 2
+    assert len(sweep.records) == sweep.n_from_store + sweep.n_scheduled
+
+
+def test_policies_re_armed_across_sweeps():
+    s = ExplorationSession()
+    pol = BudgetPolicy(max_records=3)
+    first = s.run(_space(), policies=[pol])
+    assert len(first.records) == 3 and pol.n_records == 3
+    other = _space(priorities=["memory"])       # fresh points
+    again = ExplorationSession().run(other, policies=[pol])
+    assert len(again.records) == 3              # not a stale instant stop
+    plateau = PlateauPolicy(metric="edp", patience=2)
+    ExplorationSession().run(_space(), policies=[plateau])
+    sweep2 = ExplorationSession().run(other, policies=[plateau])
+    assert len(sweep2.records) >= 1 and plateau.best is not None
+
+
+def test_process_run_async_early_stop_matches_serial_prefix():
+    space = _space()
+    serial = ExplorationSession().run(space)
+    s = ExplorationSession()
+    recs = list(s.run_async(space, executor="process", max_workers=2,
+                            policies=[BudgetPolicy(max_records=3)]))
+    assert _metric_seq(recs) == _metric_seq(serial.records[:3])
+    assert len(s.store) == 3                 # cancelled points never landed
+
+
+# ---------------------------------------------------------------------------
+# warm-start-aware sweep ordering
+# ---------------------------------------------------------------------------
+
+def test_nearest_arch_chain_keeps_similar_archs_adjacent():
+    from repro.api import as_arch_spec
+    specs = [as_arch_spec(a()) for a in
+             (sc_tpu, mc_hom_tpu, sc_eye, mc_hetero)]
+    chain = nearest_arch_chain(specs)
+    assert sorted(chain) == [0, 1, 2, 3] and chain[0] == 0
+    # from SC:TPU the nearest is the other 2-core spec, not a 5-core MC
+    assert chain[1] == 2
+    d = [s.to_dict() for s in specs]
+    assert arch_spec_similarity(d[0], d[0]) > arch_spec_similarity(d[0], d[2])
+
+
+def test_nearest_arch_order_permutes_but_preserves_results():
+    space = _space()
+    declared = ExplorationSession().run(space)
+    walked = ExplorationSession().run(space, order="nearest-arch")
+    assert _metric_set(walked.records) == _metric_set(declared.records)
+    names = [r.arch for r in walked.records]
+    # architecture-major walk: each arch's points are contiguous
+    seen, prev = set(), None
+    for n in names:
+        if n != prev:
+            assert n not in seen
+            seen.add(n)
+        prev = n
+    with pytest.raises(ValueError):
+        ExplorationSession().run(space, order="zigzag")
+
+
+def test_warm_start_hit_rate_recorded():
+    cold = ExplorationSession().run(_space())
+    assert cold.n_warm_started == 0 and cold.warm_start_hit_rate == 0.0
+    warm = ExplorationSession(warm_start=True).run(_space(),
+                                                   order="nearest-arch")
+    assert warm.n_warm_started > 0
+    assert 0.0 < warm.warm_start_hit_rate <= 1.0
+    assert warm.n_warm_started == sum(
+        1 for r in warm.records if r.ga_warm_starts and not r.from_store)
+
+
+# ---------------------------------------------------------------------------
+# CLIs (exercised in-process through their main(argv))
+# ---------------------------------------------------------------------------
+
+def _load_tool(name):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(root, "tools", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_shard_and_merge_clis_reproduce_serial(tmp_path, capsys):
+    space = _space()
+    serial = ExplorationSession().run(space)
+    manifest_path = build_manifest(space).save(str(tmp_path / "sweep.json"))
+    run_shard_cli = _load_tool("run_shard")
+    merge_cli = _load_tool("merge_stores")
+    dirs = []
+    for k in range(2):
+        out = str(tmp_path / f"shard{k}")
+        assert run_shard_cli.main([manifest_path, "--shard", f"{k}/2",
+                                   "--out", out]) == 0
+        dirs.append(out)
+    merged_dir = str(tmp_path / "merged")
+    assert merge_cli.main([merged_dir] + dirs) == 0
+    out = capsys.readouterr().out
+    assert "shard done" in out and "merged 2 stores" in out
+    merged = ResultStore(merged_dir)
+    assert _metric_set(merged.values()) == _metric_set(serial.records)
+
+
+def test_merge_cli_fails_on_missing_source(tmp_path):
+    merge_cli = _load_tool("merge_stores")
+    assert merge_cli.main([str(tmp_path / "out"),
+                           str(tmp_path / "missing")]) == 2
+
+
+def test_run_shard_cli_rejects_bad_shard_spec(tmp_path):
+    run_shard_cli = _load_tool("run_shard")
+    path = build_manifest(_space()).save(str(tmp_path / "m.json"))
+    with pytest.raises(SystemExit):
+        run_shard_cli.main([path, "--shard", "8/8"])
+    with pytest.raises(SystemExit):
+        run_shard_cli.main([path, "--shard", "nope"])
+
+
+# ---------------------------------------------------------------------------
+# store merge primitives on synthetic records
+# ---------------------------------------------------------------------------
+
+def test_result_store_jsonl_path_addressing(tmp_path):
+    path = str(tmp_path / "sub" / "recs.jsonl")
+    store = ResultStore(path)
+    for r in _demo_records():
+        store.put(r)
+    assert store.path == path and os.path.exists(path)
+    again = ResultStore(path)
+    assert _metric_set(again.values()) == _metric_set(_demo_records())
+
+
+def test_merge_first_wins_and_persists(tmp_path):
+    a, b = ResultStore(), ResultStore()
+    r0, r1, r2 = _demo_records()
+    a.put(r0), a.put(r1)
+    b.put(dataclasses.replace(r1, from_store=True)), b.put(r2)
+    merged = ResultStore.merge(a, b, cache_dir=str(tmp_path / "out"))
+    assert len(merged) == 3
+    assert not merged.get(r1.key).from_store   # normalized on merge
+    reloaded = ResultStore(str(tmp_path / "out"))
+    assert _metric_set(reloaded.values()) == _metric_set(merged.values())

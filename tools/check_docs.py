@@ -27,6 +27,8 @@ DOCTEST_MODULES = [
     "repro.api",
     "repro.api.archspec",
     "repro.api.designspace",
+    "repro.api.distributed",
+    "repro.api.policies",
     "repro.api.session",
     "repro.hw.topology",
     "repro.hw.catalog",

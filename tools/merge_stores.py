@@ -1,0 +1,59 @@
+"""Merge shard result stores offline (no deps, argparse only).
+
+    PYTHONPATH=src python tools/merge_stores.py merged shard0 shard1 shard2
+
+Sources are shard store directories (holding ``records.jsonl``) or ``.jsonl``
+files; the first positional argument is the destination store directory (or
+``.jsonl`` file).  Records are content-keyed, so the merge concatenates and
+dedups by key — merging the N shards of a partitioned sweep reproduces the
+serial run's record set exactly, and re-merging is idempotent (an existing
+destination store contributes its records first).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(description="merge shard result stores")
+    ap.add_argument("out", help="destination store directory (or .jsonl file)")
+    ap.add_argument("sources", nargs="+",
+                    help="shard store directories or records.jsonl files")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="skip sources without a store instead of failing")
+    args = ap.parse_args(argv)
+
+    from repro.api.distributed import merge_stores
+    from repro.api.session import ResultStore
+
+    sources, skipped = [], []
+    for src in args.sources:
+        if not os.path.exists(ResultStore.resolve_path(src)):
+            if args.allow_missing:
+                skipped.append(src)
+                continue
+            print(f"error: no shard store at {ResultStore.resolve_path(src)} "
+                  "(use --allow-missing to skip)", file=sys.stderr)
+            return 2
+        # load once: the loaded stores go straight into the merge
+        sources.append(ResultStore(src))
+
+    per_source = [len(s) for s in sources]
+    merged = merge_stores(args.out, *sources)
+    dupes = max(0, sum(per_source) - len(merged))
+    print(f"merged {len(sources)} stores "
+          f"({' + '.join(map(str, per_source)) or '0'} records, "
+          f"{dupes} duplicate keys) "
+          f"-> {merged.path} ({len(merged)} records)")
+    if skipped:
+        print(f"skipped missing: {', '.join(skipped)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""Run one shard of a sweep manifest on this machine (no deps, argparse only).
+
+    PYTHONPATH=src python tools/run_shard.py sweep.json --shard 2/8 --out shard2
+
+Loads the manifest (written by `repro.api.build_manifest(...).save(...)` or
+`repro.api.shard(...)`), optionally slices it to shard k of n (`--shard k/n`,
+0-based k; omit it when the manifest is already a single shard), rebuilds the
+design points with content-key verification, and runs them into a per-shard
+JSONL store under `--out`.  Re-running after a crash is incremental: points
+already in the shard store are served without scheduling.  Merge the shard
+stores afterwards with `tools/merge_stores.py`.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+
+def parse_shard(text: str) -> tuple[int, int]:
+    """'2/8' -> (2, 8), validating 0 <= k < n.
+
+        >>> parse_shard("2/8")
+        (2, 8)
+    """
+    try:
+        k_s, n_s = text.split("/")
+        k, n = int(k_s), int(n_s)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected K/N (e.g. 2/8), got {text!r}")
+    if not 0 <= k < n:
+        raise argparse.ArgumentTypeError(
+            f"shard index {k} outside 0..{n - 1}")
+    return k, n
+
+
+def main(argv: "list[str] | None" = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="run one shard of a sweep manifest")
+    ap.add_argument("manifest", help="path to a SweepManifest JSON file")
+    ap.add_argument("--shard", type=parse_shard, default=None, metavar="K/N",
+                    help="run the k-th of n contiguous balanced slices "
+                         "(0-based; omit when the manifest is one shard)")
+    ap.add_argument("--out", default=None,
+                    help="shard store directory (default: shard<K>of<N> "
+                         "next to the manifest)")
+    ap.add_argument("--executor", choices=("serial", "process"),
+                    default="serial")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-executor worker count")
+    args = ap.parse_args(argv)
+
+    from repro.api.distributed import SweepManifest, run_shard
+
+    manifest = SweepManifest.load(args.manifest)
+    out = args.out
+    if out is None:
+        k, n = (args.shard if args.shard is not None
+                else (manifest.shard_index or 0, manifest.n_shards or 1))
+        out = os.path.join(os.path.dirname(os.path.abspath(args.manifest)),
+                           f"shard{k}of{n}")
+    sweep = run_shard(manifest, cache_dir=out, shard=args.shard,
+                      executor=args.executor, max_workers=args.workers)
+    print(f"shard done: {len(sweep)} points ({sweep.n_scheduled} scheduled, "
+          f"{sweep.n_from_store} from store) in {sweep.wall_s:.1f}s "
+          f"-> {os.path.join(out, 'records.jsonl')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
