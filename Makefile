@@ -1,6 +1,6 @@
 PY := PYTHONPATH=src python
 
-.PHONY: all test tier1 docs bench bench-quick bench-full bench-list
+.PHONY: all test tier1 docs bench bench-quick bench-full bench-list faults
 
 # default flow: the full suite plus the docs gate (link check + doctests)
 all: test docs
@@ -19,6 +19,11 @@ tier1:
 # examples (doctest) of the public API surface
 docs:
 	$(PY) tools/check_docs.py
+
+# fault-injection suite: retry/quarantine semantics, crash-safe stores,
+# pool-rebuild under worker kills, SIGKILL crash-restart of a shard
+faults:
+	$(PY) -m pytest -q tests/test_resilience.py
 
 bench:
 	$(PY) -m benchmarks.run

@@ -8,6 +8,12 @@ keys and every metric value bit-identical).  Reports points/sec per runtime
 plus the streaming path: an early-stopping `run_async` sweep in
 `order="nearest-arch"`.
 
+The fault leg re-runs the serial sweep under a seeded `FaultInjector`
+(~10% injected exceptions per attempt, retry budget sized to cover them)
+and reports the recovery overhead — asserting inline that the recovered
+record set is still bit-identical to the fault-free run, the invariant
+`tests/test_resilience.py` golden-tests per backend.
+
 Quick mode sweeps 3 workloads x 7 iso-area architectures at reduced GA
 budget; --full uses the whole `bench_exploration` grid.
 """
@@ -19,7 +25,8 @@ import tempfile
 import time
 
 from repro.api import (BudgetPolicy, DesignSpace, ExplorationSession,
-                       GAConfig, ResultStore, build_manifest, run_shard)
+                       FaultInjector, GAConfig, ResultStore, RetryPolicy,
+                       build_manifest, run_shard)
 from repro.configs.paper_workloads import EXPLORATION_WORKLOADS
 from repro.hw.catalog import EXPLORATION_ARCHITECTURES
 
@@ -91,6 +98,26 @@ def run(report=print, full: bool = False, seed: int = 0,
            + f" ({len(ref)} records)")
     results[("runtime", "identity")] = dict(
         identical=True, points=len(ref), shard_counts=list(SHARD_COUNTS))
+
+    # ---- fault leg: ~10% injected faults, recovery overhead --------------
+    injector = FaultInjector(seed=seed, exception_rate=0.10,
+                             max_faults_per_point=2)
+    faulted = timed("serial+faults", lambda: ExplorationSession(
+        retry_policy=RetryPolicy(max_attempts=3),
+        fault_injector=injector).run(space))
+    assert _record_set(faulted.records) == ref, \
+        "faulted records diverge from fault-free serial"
+    assert faulted.n_failed == 0, \
+        f"{faulted.n_failed} points quarantined despite retry budget"
+    clean_wall = results[("runtime", "serial")]["wall_s"]
+    fault_wall = results[("runtime", "serial+faults")]["wall_s"]
+    overhead = fault_wall / max(clean_wall, 1e-9) - 1.0
+    report(f"fault recovery: {faulted.n_retried} retries over "
+           f"{len(faulted)} points, {overhead * 100:+.1f}% wall overhead, "
+           "record set bit-identical")
+    results[("runtime", "fault_recovery")] = dict(
+        n_retried=faulted.n_retried, n_failed=faulted.n_failed,
+        exception_rate=0.10, overhead_frac=overhead, identical=True)
 
     # ---- streaming: nearest-arch walk + early stop -----------------------
     gc.collect()

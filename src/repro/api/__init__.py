@@ -15,7 +15,15 @@ The distributed sweep runtime rides on the same pieces: `build_manifest` /
 `merge_stores` fold the per-shard stores back into the serial run's exact
 record set, and `ExplorationSession.run_async` streams records through
 `StopPolicy` objects (`BudgetPolicy`, `PlateauPolicy`,
-`ParetoStagnationPolicy`, `TargetMetricPolicy`) for early-stopping sweeps.
+`ParetoStagnationPolicy`, `TargetMetricPolicy`, `HeartbeatMonitor`) for
+early-stopping (and supervised) sweeps.
+
+The runtime is fault-tolerant (`repro.api.resilience`): per-point failures
+are retried under a `RetryPolicy` (seeded deterministic backoff) and
+quarantined as content-keyed `FailureRecord`s on exhaustion — never fatal —
+while a seeded `FaultInjector` makes every recovery path testable.  Under
+any injected fault schedule within the retry budget, the healthy record
+set stays bit-identical to a fault-free serial run.
 
 `DEFAULT_GRANULARITIES` (re-exported from `repro.api.session`) is the
 granularity axis used by `ExplorationSession.explore_granularity` when none
@@ -31,8 +39,12 @@ from repro.api.session import (DEFAULT_GRANULARITIES, ExplorationRecord,
                                SerialExecutor, SweepExecutor, SweepResult,
                                best_record, default_session, pareto_records,
                                pivot_records)
-from repro.api.policies import (BudgetPolicy, ParetoStagnationPolicy,
-                                PlateauPolicy, StopPolicy, TargetMetricPolicy)
+from repro.api.policies import (BudgetPolicy, HeartbeatMonitor,
+                                ParetoStagnationPolicy, PlateauPolicy,
+                                StopPolicy, TargetMetricPolicy)
+from repro.api.resilience import (FailureRecord, FaultInjector, InjectedFault,
+                                  PointOutcome, RetryPolicy,
+                                  StoreCorruptionError, StoreLockError)
 from repro.api.distributed import (SweepManifest, build_manifest,
                                    merge_stores, run_shard, shard)
 from repro.hw.topology import (ClusterSpec, LinkSpec, TopologySpec,
@@ -48,7 +60,9 @@ __all__ = [
     "GranularitySweep", "ResultStore", "FifoCache", "DEFAULT_GRANULARITIES",
     "SweepExecutor", "SerialExecutor", "ProcessExecutor",
     "StopPolicy", "BudgetPolicy", "PlateauPolicy", "ParetoStagnationPolicy",
-    "TargetMetricPolicy",
+    "TargetMetricPolicy", "HeartbeatMonitor",
+    "RetryPolicy", "FailureRecord", "FaultInjector", "PointOutcome",
+    "InjectedFault", "StoreCorruptionError", "StoreLockError",
     "SweepManifest", "build_manifest", "shard", "run_shard", "merge_stores",
     "best_record", "pareto_records", "pivot_records", "default_session",
 ]

@@ -30,6 +30,8 @@ import os
 from typing import Iterable, Mapping
 
 from repro.api.designspace import DesignPoint, DesignSpace, order_points
+from repro.api.policies import HeartbeatMonitor
+from repro.api.resilience import RetryPolicy
 from repro.api.session import (ExplorationSession, ResultStore, SweepResult)
 from repro.core.workload import Workload
 
@@ -213,6 +215,13 @@ def run_shard(
     max_workers: int | None = None,
     session: ExplorationSession | None = None,
     progress=None,
+    retries: int = 0,
+    retry_policy: "RetryPolicy | None" = None,
+    fault_injector=None,
+    deadline_s: float | None = None,
+    heartbeat: str | None = None,
+    policies=(),
+    repair: bool = False,
 ) -> SweepResult:
     """Execute a shard manifest, writing records to a per-shard JSONL store.
 
@@ -223,29 +232,58 @@ def run_shard(
     store lives at `cache_dir` — restarting a crashed shard is incremental,
     exactly like re-running a local sweep.
 
+    Resilience knobs: `retries` gives every point that many extra attempts
+    (shorthand for `retry_policy=RetryPolicy(max_attempts=retries + 1)`;
+    pass `retry_policy` for backoff control), `deadline_s` re-dispatches
+    stragglers under the process executor, `fault_injector` runs the shard
+    under a seeded fault schedule (testing), `repair` quarantines corrupt
+    store lines instead of refusing to load, and `heartbeat` names a JSON
+    file that gets an atomic progress beat after every point — a
+    supervisor polls it to tell a slow shard from a dead one.  Points that
+    exhaust retries are quarantined into ``failures.jsonl`` next to the
+    records, reported on the returned `SweepResult`, and never abort the
+    shard.
+
         >>> from repro.api.designspace import DesignSpace, GAConfig
         >>> from repro.hw.catalog import sc_tpu
         >>> space = DesignSpace(workloads=["fsrcnn"], archs={"SC:TPU": sc_tpu},
         ...                     granularities=["layer", ("tile", 8, 1)],
         ...                     ga=GAConfig(pop_size=4, generations=2))
         >>> sweep = run_shard(build_manifest(space), cache_dir=None,
-        ...                   shard=(0, 2))
-        >>> len(sweep), sweep.n_scheduled
-        (1, 1)
+        ...                   shard=(0, 2), retries=1)
+        >>> len(sweep), sweep.n_scheduled, sweep.n_failed
+        (1, 1, 0)
     """
     if not isinstance(manifest, SweepManifest):
         manifest = SweepManifest.load(manifest)
     if shard is not None:
         k, n = shard
         manifest = manifest.shard(n, k)
+    if retry_policy is None and retries:
+        retry_policy = RetryPolicy(max_attempts=retries + 1)
     if session is None:
-        session = ExplorationSession(cache_dir=cache_dir)
-    return session.run(manifest.design_points(), executor=executor,
-                       max_workers=max_workers, progress=progress)
+        session = ExplorationSession(cache_dir=cache_dir, repair=repair,
+                                     retry_policy=retry_policy,
+                                     fault_injector=fault_injector,
+                                     deadline_s=deadline_s)
+    points = manifest.design_points()
+    policies = list(policies)
+    monitor = None
+    if heartbeat is not None:
+        monitor = HeartbeatMonitor(heartbeat, total=len(points),
+                                   shard_index=manifest.shard_index,
+                                   n_shards=manifest.n_shards)
+        policies.append(monitor)
+    sweep = session.run(points, executor=executor, max_workers=max_workers,
+                        progress=progress, policies=policies)
+    if monitor is not None:
+        monitor.finalize("done" if sweep.stop_reason is None else "stopped")
+    return sweep
 
 
 def merge_stores(out: str | None, *sources: "ResultStore | str",
-                 require_exists: bool = True) -> ResultStore:
+                 require_exists: bool = True,
+                 repair: bool = False) -> ResultStore:
     """Merge shard stores into one (`ResultStore.merge` + path validation).
 
     `sources` are store directories (holding ``records.jsonl``), ``.jsonl``
@@ -253,6 +291,14 @@ def merge_stores(out: str | None, *sources: "ResultStore | str",
     None for memory-only).  With `require_exists` (the default) a missing
     source path is an error — `require_exists=False` skips missing sources
     instead (a crashed shard should not block merging the others).
+    `repair=True` quarantines corrupt mid-file store lines to ``.bad``
+    sidecars instead of refusing to load.
+
+    Failure records merge too, first-wins, and a healthy record for a key
+    always supersedes any shard's failure for it — so the healthy-record
+    merge of a faulted sharded sweep stays bit-identical to a fault-free
+    serial run, while the quarantine history survives in the merged
+    ``failures.jsonl``.
 
         >>> from repro.api.session import _demo_records
         >>> a, b = ResultStore(), ResultStore()
@@ -264,5 +310,6 @@ def merge_stores(out: str | None, *sources: "ResultStore | str",
     if not require_exists:  # ResultStore.merge itself errors on missing
         sources = tuple(
             src for src in sources if isinstance(src, ResultStore)
-            or os.path.exists(ResultStore.resolve_path(src)))
-    return ResultStore.merge(*sources, cache_dir=out)
+            or os.path.exists(ResultStore.resolve_path(src))
+            or os.path.exists(ResultStore.resolve_failures_path(src)))
+    return ResultStore.merge(*sources, cache_dir=out, repair=repair)

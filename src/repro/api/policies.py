@@ -20,6 +20,8 @@ only counts computed records.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Sequence
 
@@ -43,12 +45,23 @@ class StopPolicy:
 
     Subclasses set `self.reason` to a human-readable explanation when they
     fire; `ExplorationSession.run` copies it onto `SweepResult.stop_reason`.
+
+    Policies also see *failure events*: when a point exhausts its retry
+    budget and is quarantined, the sweep calls `update_failure(failure)`
+    with the `repro.api.resilience.FailureRecord` before moving on.  The
+    base implementation ignores failures; subclasses that want to stop a
+    degrading sweep (e.g. `BudgetPolicy(max_failures=...)`) override it
+    with the same True-means-stop contract as `update`.
     """
 
     reason: str | None = None
 
     def update(self, record: ExplorationRecord) -> bool:
         raise NotImplementedError
+
+    def update_failure(self, failure) -> bool:
+        """Observe a quarantined point; True to stop the sweep (default no)."""
+        return False
 
     def reset(self) -> None:
         """Re-arm the policy for a new sweep (subclasses with state extend)."""
@@ -60,9 +73,12 @@ class BudgetPolicy(StopPolicy):
 
     `max_records` counts every observed record (store hits included),
     `max_scheduled` only freshly computed ones — both are deterministic.
-    `max_wall_s` measures wall time from the first record and is therefore
-    *not* deterministic across machines; use it as a safety net, not as a
-    reproducibility boundary.
+    `max_failures` counts quarantined points (via `update_failure`), so a
+    sweep whose environment is falling over stops instead of burning the
+    whole walk on retries; under a fixed seeded fault schedule it is as
+    deterministic as the record budgets.  `max_wall_s` measures wall time
+    from the first record and is therefore *not* deterministic across
+    machines; use it as a safety net, not as a reproducibility boundary.
 
         >>> p = BudgetPolicy(max_records=3)
         >>> [p.update(r) for r in _demo_stream()[:4]]
@@ -75,23 +91,40 @@ class BudgetPolicy(StopPolicy):
         ...         for r in _demo_stream()]
         >>> [p.update(r) for r in hits]
         [False, False, False, False, False]
+        >>> p = BudgetPolicy(max_failures=2)
+        >>> [p.update_failure(f) for f in ("boom", "boom")]  # any FailureRecord
+        [False, True]
+        >>> p.reason
+        'budget: 2 quarantined points'
     """
 
     def __init__(self, max_records: int | None = None,
                  max_scheduled: int | None = None,
-                 max_wall_s: float | None = None):
-        if max_records is None and max_scheduled is None and max_wall_s is None:
+                 max_wall_s: float | None = None,
+                 max_failures: int | None = None):
+        if max_records is None and max_scheduled is None \
+                and max_wall_s is None and max_failures is None:
             raise ValueError("BudgetPolicy needs at least one budget")
         self.max_records = max_records
         self.max_scheduled = max_scheduled
         self.max_wall_s = max_wall_s
+        self.max_failures = max_failures
         self.reset()
 
     def reset(self) -> None:
         super().reset()
         self.n_records = 0
         self.n_scheduled = 0
+        self.n_failures = 0
         self._t0: float | None = None
+
+    def update_failure(self, failure) -> bool:
+        self.n_failures += 1
+        if self.max_failures is not None \
+                and self.n_failures >= self.max_failures:
+            self.reason = f"budget: {self.max_failures} quarantined points"
+            return True
+        return False
 
     def update(self, record: ExplorationRecord) -> bool:
         if self._t0 is None:
@@ -227,3 +260,68 @@ class TargetMetricPolicy(StopPolicy):
             self.reason = f"target: {self.metric} {value:g} <= {self.target:g}"
             return True
         return False
+
+
+class HeartbeatMonitor(StopPolicy):
+    """Non-stopping observer that writes a JSON heartbeat file as the sweep
+    progresses, so an external supervisor can tell a slow shard from a dead
+    one (and a crash-restart test can wait for "mid-sweep" deterministically).
+
+    Each write is atomic (tmp file + `os.replace`), so a reader never sees
+    a torn heartbeat.  The file holds `done` / `failed` counts, the
+    optional `total` / `shard_index` / `n_shards` identity, a monotonic
+    `seq`, and `updated_unix` — the only wall-clock field, for liveness
+    only, never for reproducibility.  `update`/`update_failure` always
+    return False: a heartbeat observes, it never stops the sweep.
+
+        >>> import json, os, tempfile
+        >>> path = os.path.join(tempfile.mkdtemp(), "hb.json")
+        >>> hb = HeartbeatMonitor(path, total=5)
+        >>> [hb.update(r) for r in _demo_stream()[:2]]
+        [False, False]
+        >>> _ = hb.update_failure("boom")
+        >>> beat = json.load(open(path))
+        >>> beat["done"], beat["failed"], beat["total"], beat["seq"]
+        (2, 1, 5, 3)
+    """
+
+    def __init__(self, path: str, total: int | None = None,
+                 shard_index: int | None = None, n_shards: int | None = None):
+        self.path = path
+        self.total = total
+        self.shard_index = shard_index
+        self.n_shards = n_shards
+        self.reset()
+
+    def reset(self) -> None:
+        super().reset()
+        self.done = 0
+        self.failed = 0
+        self.seq = 0
+
+    def _beat(self, status: str = "running") -> None:
+        payload = {"status": status, "done": self.done, "failed": self.failed,
+                   "total": self.total, "shard_index": self.shard_index,
+                   "n_shards": self.n_shards, "seq": self.seq,
+                   "updated_unix": time.time()}
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as fh:
+            json.dump(payload, fh)
+        os.replace(tmp, self.path)
+
+    def update(self, record: ExplorationRecord) -> bool:
+        self.done += 1
+        self.seq += 1
+        self._beat()
+        return False
+
+    def update_failure(self, failure) -> bool:
+        self.failed += 1
+        self.seq += 1
+        self._beat()
+        return False
+
+    def finalize(self, status: str = "done") -> None:
+        """Stamp a terminal heartbeat (call after the sweep finishes)."""
+        self.seq += 1
+        self._beat(status)

@@ -19,12 +19,23 @@ import json
 import multiprocessing
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor
+import warnings
+from concurrent.futures import ProcessPoolExecutor, TimeoutError as \
+    _FutureTimeout
+from concurrent.futures.process import BrokenProcessPool
 from typing import Callable, Iterable, Iterator, Mapping, Sequence
 
 import numpy as np
 
+try:                                   # advisory store-file locking (POSIX);
+    import fcntl                       # single-line O_APPEND writes remain
+except ImportError:                    # the fallback elsewhere
+    fcntl = None
+
 from repro.api.archspec import ArchSpec
+from repro.api.resilience import (NO_RETRY, FailureRecord, FaultInjector,
+                                  PointOutcome, RetryPolicy,
+                                  StoreCorruptionError, StoreLockError)
 from repro.api.designspace import DesignPoint, DesignSpace, \
     arch_spec_similarity, granularity_label, order_points
 from repro.core.allocator import feasible_cores_per_layer
@@ -307,6 +318,8 @@ class SweepResult:
         ['a', 'b']
         >>> round(sweep.warm_start_hit_rate, 2), sweep.stop_reason
         (0.33, None)
+        >>> sweep.n_failed, sweep.n_retried, sweep.failures  # fault-free run
+        (0, 0, [])
     """
 
     records: list[ExplorationRecord]
@@ -316,6 +329,9 @@ class SweepResult:
     n_warm_started: int = 0   # scheduled points whose GA got >=1 warm seed
     n_cancelled: int = 0      # planned points never delivered (early stop)
     stop_reason: str | None = None   # the firing StopPolicy's reason
+    n_failed: int = 0         # points quarantined after exhausting retries
+    n_retried: int = 0        # extra attempts burned recovering faults
+    failures: list = dataclasses.field(default_factory=list)  # FailureRecord
 
     @property
     def warm_start_hit_rate(self) -> float:
@@ -349,6 +365,18 @@ class ResultStore:
     `cache_dir` ending in ``.jsonl`` is taken as the store file itself
     (shard stores are often addressed by file).
 
+    Crash safety: appends are single `O_APPEND` writes under an advisory
+    `fcntl` lock, so concurrent shard writers cannot interleave torn
+    lines.  On load, only a malformed *final* line — the signature of a
+    crash mid-append — is silently dropped (and truncated away so later
+    appends start on a clean line); a malformed line anywhere earlier
+    raises `StoreCorruptionError` unless the store is opened with
+    ``repair=True``, which quarantines the bad lines to a ``.bad``
+    sidecar and warns with counts.  Quarantined point failures
+    (`FailureRecord`) live in a ``failures.jsonl`` sidecar beside the
+    records; a failure is superseded the moment a healthy record for the
+    same key lands.
+
         >>> store = ResultStore()                   # memory-only
         >>> rec = _demo_records()[0]
         >>> store.put(rec)
@@ -359,6 +387,7 @@ class ResultStore:
     """
 
     FILENAME = "records.jsonl"
+    FAILURES_FILENAME = "failures.jsonl"
 
     @staticmethod
     def resolve_path(store: str) -> str:
@@ -374,41 +403,205 @@ class ResultStore:
         return store if store.endswith(".jsonl") \
             else os.path.join(store, ResultStore.FILENAME)
 
-    def __init__(self, cache_dir: str | None = None):
+    @staticmethod
+    def resolve_failures_path(store: str) -> str:
+        """The failures sidecar beside a store address.
+
+            >>> ResultStore.resolve_failures_path("shard0")
+            'shard0/failures.jsonl'
+            >>> ResultStore.resolve_failures_path("direct/recs.jsonl")
+            'direct/recs.failures.jsonl'
+        """
+        path = ResultStore.resolve_path(store)
+        if os.path.basename(path) == ResultStore.FILENAME:
+            return os.path.join(os.path.dirname(path),
+                                ResultStore.FAILURES_FILENAME)
+        return path[:-len(".jsonl")] + ".failures.jsonl"
+
+    def __init__(self, cache_dir: str | None = None, repair: bool = False):
         self._records: dict[str, ExplorationRecord] = {}
         # per-workload view of the same records (warm-start lookups are
         # per workload; scanning the whole store per point is O(sweep^2))
         self._by_workload: dict[str, dict[str, ExplorationRecord]] = {}
+        self._failures: dict[str, FailureRecord] = {}
         self.path: str | None = None
+        self.failures_path: str | None = None
         if cache_dir is not None:
             self.path = self.resolve_path(cache_dir)
+            self.failures_path = self.resolve_failures_path(cache_dir)
             parent = os.path.dirname(self.path)
             if parent:
                 os.makedirs(parent, exist_ok=True)
             if os.path.exists(self.path):
-                with open(self.path) as f:
-                    for line in f:
-                        line = line.strip()
-                        if not line:
-                            continue
-                        try:
-                            rec = ExplorationRecord.from_dict(json.loads(line))
-                        except (ValueError, KeyError, TypeError):
-                            # torn tail line from an interrupted append:
-                            # drop it (the point just gets re-scheduled)
-                            continue
-                        self._records[rec.key] = rec
-                        self._by_workload.setdefault(rec.workload, {})[rec.key] = rec
+                for rec in self._load_jsonl(
+                        self.path, ExplorationRecord.from_dict, repair):
+                    self._records[rec.key] = rec
+                    self._by_workload.setdefault(
+                        rec.workload, {})[rec.key] = rec
+            if os.path.exists(self.failures_path):
+                for f in self._load_jsonl(
+                        self.failures_path, FailureRecord.from_dict, repair):
+                    if f.key not in self._records:  # healthy record wins
+                        self._failures[f.key] = f
 
+    # ---- crash-safe JSONL plumbing ---------------------------------------
+    @staticmethod
+    def _scan_jsonl(path: str, parse):
+        """Parse a JSONL file, classifying lines.
+
+        Returns ``(parsed, bad, offsets, n_lines)`` where `parsed` is
+        ``[(index, object), ...]``, `bad` is ``[(index, raw_line), ...]``
+        and `offsets[i]` is the byte offset of line `i` (for tail
+        truncation)."""
+        with open(path, encoding="utf-8") as f:
+            raw = f.read()
+        lines = raw.split("\n")
+        if lines and lines[-1] == "":
+            lines.pop()                # trailing newline, not an entry
+        parsed, bad, offsets, pos = [], [], [], 0
+        for i, line in enumerate(lines):
+            offsets.append(pos)
+            pos += len(line.encode("utf-8")) + 1
+            if not line.strip():
+                continue
+            try:
+                parsed.append((i, parse(json.loads(line))))
+            except (ValueError, KeyError, TypeError):
+                bad.append((i, line))
+        return parsed, bad, offsets, len(lines)
+
+    @classmethod
+    def _load_jsonl(cls, path: str, parse, repair: bool) -> list:
+        """Strict JSONL load: only a torn *tail* may vanish silently.
+
+        A malformed final line is the expected signature of a crash
+        mid-append: it is dropped and the file truncated back to the last
+        good line (so the next append starts clean instead of gluing onto
+        the torn bytes).  Malformed lines anywhere earlier are corruption:
+        `StoreCorruptionError` unless `repair`, which moves them to
+        ``<path>.bad`` and rewrites the file, warning with counts."""
+        parsed, bad, offsets, n_lines = cls._scan_jsonl(path, parse)
+        torn = None
+        if bad and bad[-1][0] == n_lines - 1:
+            torn = bad.pop()           # torn tail: silently dropped
+        if bad:
+            if not repair:
+                raise StoreCorruptionError(
+                    f"{path}: {len(bad)} malformed line(s) before the final "
+                    f"line (first at line {bad[0][0] + 1}) — refusing to "
+                    "silently drop records; open with repair=True to "
+                    f"quarantine them to {path}.bad")
+            quarantined = bad + ([torn] if torn is not None else [])
+            with open(path + ".bad", "a", encoding="utf-8") as bf:
+                for _, line in quarantined:
+                    bf.write(line + "\n")
+            good = {i for i, _ in parsed}
+            with open(path, encoding="utf-8") as f:
+                lines = f.read().split("\n")
+            tmp = path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                for i, _ in parsed:
+                    f.write(lines[i] + "\n")
+            os.replace(tmp, path)
+            warnings.warn(
+                f"{path}: quarantined {len(quarantined)} malformed line(s) "
+                f"to {path}.bad ({len(good)} good records kept)",
+                RuntimeWarning, stacklevel=3)
+        elif torn is not None:
+            try:                       # truncate the torn tail away
+                with open(path, "r+", encoding="utf-8") as f:
+                    f.truncate(offsets[torn[0]])
+            except OSError:            # read-only store: load-only repair
+                pass
+        return [obj for _, obj in parsed]
+
+    def _append(self, path: str, data: str) -> None:
+        """Single locked `O_APPEND` write — two shards pointed at one
+        store file cannot interleave torn lines."""
+        fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+        try:
+            if fcntl is not None:
+                try:
+                    fcntl.flock(fd, fcntl.LOCK_EX)
+                except OSError as e:
+                    raise StoreLockError(
+                        f"cannot take the advisory lock on {path}: {e} "
+                        "(refusing an unlocked append — another writer "
+                        "could interleave torn lines)") from e
+            os.write(fd, data.encode("utf-8"))
+        finally:
+            os.close(fd)               # closing releases the flock
+
+    def repair_tail(self) -> int:
+        """Truncate a torn (newline-less) tail; returns bytes removed.
+
+        The recovery step after a crash-mid-append (or an injected
+        ``corrupt`` fault): the file ends without a newline exactly when
+        an append died partway, and everything after the last newline is
+        the torn fragment."""
+        if self.path is None or not os.path.exists(self.path):
+            return 0
+        with open(self.path, "rb+") as f:
+            data = f.read()
+            if not data or data.endswith(b"\n"):
+                return 0
+            cut = data.rfind(b"\n") + 1
+            f.truncate(cut)
+            return len(data) - cut
+
+    def append_torn(self, text: str) -> None:
+        """Append a torn (truncated, newline-less) line — the fault
+        injector's model of a crash mid-append.  Test/injection only."""
+        if self.path is not None:
+            self._append(self.path, text[: max(1, len(text) // 2)])
+
+    def verify(self) -> dict:
+        """Integrity-check the on-disk store files.
+
+        Returns ``{"n_records", "n_failures", "torn_tail"}`` counts on
+        success; raises `StoreCorruptionError` if either file has
+        malformed lines before its final line.  Exposed on the CLI as
+        ``tools/merge_stores.py --verify`` (via `verify_path`, which
+        checks a store address without loading it)."""
+        return self._verify_files(self.path, self.failures_path)
+
+    @classmethod
+    def verify_path(cls, store: str) -> dict:
+        """`verify()` for a store address (directory or ``.jsonl`` file)
+        without loading it — so corruption is a report, not a load error."""
+        return cls._verify_files(cls.resolve_path(store),
+                                 cls.resolve_failures_path(store))
+
+    @classmethod
+    def _verify_files(cls, records_path: str | None,
+                      failures_path: str | None) -> dict:
+        report = {"n_records": 0, "n_failures": 0, "torn_tail": 0}
+        for path, parse, field in (
+                (records_path, ExplorationRecord.from_dict, "n_records"),
+                (failures_path, FailureRecord.from_dict, "n_failures")):
+            if path is None or not os.path.exists(path):
+                continue
+            parsed, bad, _, n_lines = cls._scan_jsonl(path, parse)
+            if bad and bad[-1][0] == n_lines - 1:
+                bad.pop()
+                report["torn_tail"] += 1
+            if bad:
+                raise StoreCorruptionError(
+                    f"{path}: {len(bad)} malformed line(s) before the final "
+                    f"line (first at line {bad[0][0] + 1})")
+            report[field] = len(parsed)
+        return report
+
+    # ---- records ---------------------------------------------------------
     def get(self, key: str) -> ExplorationRecord | None:
         return self._records.get(key)
 
     def put(self, record: ExplorationRecord) -> None:
         self._records[record.key] = record
         self._by_workload.setdefault(record.workload, {})[record.key] = record
+        self._failures.pop(record.key, None)   # success supersedes failure
         if self.path is not None:
-            with open(self.path, "a") as f:
-                f.write(json.dumps(record.to_dict()) + "\n")
+            self._append(self.path, json.dumps(record.to_dict()) + "\n")
 
     def values(self) -> list[ExplorationRecord]:
         return list(self._records.values())
@@ -423,9 +616,29 @@ class ResultStore:
     def __contains__(self, key: str) -> bool:
         return key in self._records
 
+    # ---- quarantined failures --------------------------------------------
+    def put_failure(self, failure: FailureRecord) -> None:
+        """Quarantine a point that exhausted its retry budget.
+
+        A no-op when a healthy record for the key already exists (the
+        failure is stale by definition)."""
+        if failure.key in self._records:
+            return
+        self._failures[failure.key] = failure
+        if self.failures_path is not None:
+            self._append(self.failures_path,
+                         json.dumps(failure.to_dict()) + "\n")
+
+    def get_failure(self, key: str) -> FailureRecord | None:
+        return self._failures.get(key)
+
+    def failures(self) -> list[FailureRecord]:
+        """Quarantined points without a healthy record (insertion order)."""
+        return list(self._failures.values())
+
     @classmethod
-    def merge(cls, *stores: "ResultStore | str",
-              cache_dir: str | None = None) -> "ResultStore":
+    def merge(cls, *stores: "ResultStore | str", cache_dir: str | None = None,
+              repair: bool = False) -> "ResultStore":
         """Concatenate stores, deduplicating by content key (first wins).
 
         Records are content-keyed — identical keys promise identical
@@ -438,6 +651,12 @@ class ResultStore:
         `FileNotFoundError`, never a silently empty contribution;
         `cache_dir` persists the merged store.
 
+        Failure records fold the same way — first wins per key — except
+        that a healthy record for a key from *any* source supersedes every
+        shard's failure for it, so the healthy-point merge is exactly the
+        fault-free record set and only genuinely unrecovered points stay
+        quarantined.
+
             >>> a, b = ResultStore(), ResultStore()
             >>> r0, r1, _ = _demo_records()
             >>> a.put(r0), b.put(r0), b.put(r1)     # r0 lands in both
@@ -448,17 +667,24 @@ class ResultStore:
             True
         """
         for src in stores:
+            # a shard whose every point was quarantined has only the
+            # failures sidecar — still a store, still worth merging
             if not isinstance(src, ResultStore) \
-                    and not os.path.exists(cls.resolve_path(src)):
+                    and not os.path.exists(cls.resolve_path(src)) \
+                    and not os.path.exists(cls.resolve_failures_path(src)):
                 raise FileNotFoundError(
                     f"no shard store at {cls.resolve_path(src)}")
+        loaded = [src if isinstance(src, ResultStore)
+                  else cls(str(src), repair=repair) for src in stores]
         out = cls(cache_dir)
-        for src in stores:
-            if not isinstance(src, ResultStore):
-                src = cls(str(src))
+        for src in loaded:
             for rec in src.values():
                 if rec.key not in out:
                     out.put(dataclasses.replace(rec, from_store=False))
+        for src in loaded:
+            for failure in src.failures():
+                if failure.key not in out._failures:
+                    out.put_failure(failure)   # healthy keys skipped inside
         return out
 
 
@@ -469,14 +695,23 @@ class ResultStore:
 _WORKER_SESSION: "ExplorationSession | None" = None
 
 
-def _process_worker(job: "tuple[DesignPoint, tuple]") -> dict:
+def _process_worker(job: tuple) -> dict:
+    """Compute one point (with worker-side retries) and return the
+    `PointOutcome` envelope as a JSON-able dict.
+
+    Exceptions — real or injected — are retried here, inside the worker,
+    up to the shipped `RetryPolicy` budget; only worker *kills* (abrupt
+    process death) need the parent's pool-rebuild path."""
     global _WORKER_SESSION
     if _WORKER_SESSION is None:
         _WORKER_SESSION = ExplorationSession()
-    point, warm = job
-    return _WORKER_SESSION._compute_record(
-        point, initial_allocations=[np.array(a, dtype=np.int64)
-                                    for a in warm]).to_dict()
+    point, warm, start_attempt, retry_policy, injector = job
+    outcome = _WORKER_SESSION._compute_outcome(
+        point,
+        initial_allocations=[np.array(a, dtype=np.int64) for a in warm],
+        retry_policy=retry_policy, fault_injector=injector,
+        start_attempt=start_attempt, allow_kill=True)
+    return outcome.to_jsonable()
 
 
 # ---------------------------------------------------------------------------
@@ -487,16 +722,19 @@ def _process_worker(job: "tuple[DesignPoint, tuple]") -> dict:
 class SweepExecutor:
     """Backend protocol of `ExplorationSession.run`/`run_async`.
 
-    `stream(points, warm_lookup)` yields exactly one `ExplorationRecord`
+    `stream(points, warm_lookup)` yields exactly one `PointOutcome`
     per point **in submission order** — the determinism contract that makes
     streamed sweeps, early stops, and shard merges reproduce the serial
     record sequence bit-for-bit regardless of how the work was overlapped.
-    `cancel()` drops everything not yet yielded (outstanding work may still
-    burn cycles, but its records never land in the store)."""
+    An outcome carries either a healthy `ExplorationRecord` or, when the
+    point exhausted its retry budget, a `FailureRecord` — executors never
+    let one bad point abort the sweep.  `cancel()` drops everything not
+    yet yielded (outstanding work may still burn cycles, but its records
+    never land in the store)."""
 
     def stream(self, points: "Sequence[DesignPoint]",
                warm_lookup: Callable[["DesignPoint"], Sequence],
-               ) -> Iterator[ExplorationRecord]:
+               ) -> Iterator[PointOutcome]:
         raise NotImplementedError
 
     def cancel(self) -> None:  # pragma: no cover - overridden or no-op
@@ -508,7 +746,9 @@ class SerialExecutor(SweepExecutor):
 
     Warm starts are resolved lazily, point by point, so later points in one
     sweep see the records of earlier ones (the behavior the nearest-arch
-    walk is designed around).
+    walk is designed around).  Per-point exceptions are retried under the
+    session's `RetryPolicy` and quarantined on exhaustion — they never
+    propagate out of the stream.
 
         >>> from repro.api.designspace import DesignSpace, GAConfig
         >>> from repro.hw.catalog import sc_tpu
@@ -516,7 +756,8 @@ class SerialExecutor(SweepExecutor):
         ...                     granularities=["layer"],
         ...                     ga=GAConfig(pop_size=4, generations=2))
         >>> ex = SerialExecutor(ExplorationSession())
-        >>> [r.granularity for r in ex.stream(list(space), lambda p: ())]
+        >>> [o.record.granularity for o in ex.stream(list(space),
+        ...                                          lambda p: ())]
         ['layer']
     """
 
@@ -529,11 +770,25 @@ class SerialExecutor(SweepExecutor):
         for point in points:
             if self._cancelled:
                 return
-            yield self.session._compute_record(
+            yield self.session._compute_outcome(
                 point, initial_allocations=warm_lookup(point))
 
     def cancel(self) -> None:
         self._cancelled = True
+
+
+class _PoolJob:
+    """Parent-side state of one submitted point (attempt/retry ledger)."""
+
+    __slots__ = ("point", "warm", "key", "attempt", "n_retries", "outcome")
+
+    def __init__(self, point, warm, attempt=0):
+        self.point = point
+        self.warm = warm
+        self.key = point.content_key()
+        self.attempt = attempt          # attempts burned so far
+        self.n_retries = 0              # parent-side retries (kills/timeouts)
+        self.outcome: PointOutcome | None = None   # set when pre-resolved
 
 
 class ProcessExecutor(SweepExecutor):
@@ -541,35 +796,167 @@ class ProcessExecutor(SweepExecutor):
 
     All points are submitted up-front (warm starts therefore resolve
     against the pre-existing store only — workers have no store) and
-    records are yielded in submission order, so the stream is bit-identical
-    to `SerialExecutor`'s while computation overlaps across workers.
-    `cancel()` abandons unfinished futures; their results are discarded
-    even if a worker was already computing them, keeping the ingested
-    record set deterministic at record granularity."""
+    outcomes are yielded in submission order, so the stream is
+    bit-identical to `SerialExecutor`'s while computation overlaps across
+    workers.  `cancel()` abandons unfinished futures; their results are
+    discarded even if a worker was already computing them, keeping the
+    ingested record set deterministic at record granularity.
 
-    def __init__(self, max_workers: int | None = None):
+    Fault tolerance: per-point exceptions retry *inside* the worker under
+    `retry_policy`; a worker that dies abruptly (SIGKILL, injected kill)
+    breaks the whole pool, and the executor survives it — the spawn pool
+    is rebuilt and every un-yielded point resubmitted.  Attribution is
+    deterministic under an injected schedule (the parent holds the same
+    pure `FaultInjector` and charges exactly the points planned to die);
+    for real, unplanned deaths the head point — the one whose result was
+    being awaited — is charged.  `deadline_s` bounds each `future.result`
+    wait: a straggler past the deadline is re-dispatched as a fresh
+    attempt (wall-clock-based, so a robustness net rather than a
+    reproducibility boundary — like `BudgetPolicy.max_wall_s`)."""
+
+    def __init__(self, max_workers: int | None = None,
+                 retry_policy: RetryPolicy | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 deadline_s: float | None = None):
         self.max_workers = max_workers or os.cpu_count() or 1
+        self.retry_policy = retry_policy
+        self.fault_injector = fault_injector
+        self.deadline_s = deadline_s
         self._pool: ProcessPoolExecutor | None = None
         self._cancelled = False
+
+    # spawn, not fork: callers routinely have jax (multithreaded)
+    # imported, and forking a threaded process can deadlock
+    def _new_pool(self) -> ProcessPoolExecutor:
+        return ProcessPoolExecutor(
+            max_workers=self.max_workers,
+            mp_context=multiprocessing.get_context("spawn"))
+
+    def _submit(self, job: _PoolJob):
+        return self._pool.submit(
+            _process_worker, (job.point, job.warm, job.attempt,
+                              self.retry_policy, self.fault_injector))
+
+    def _planned_death(self, job: _PoolJob,
+                       policy: RetryPolicy) -> "int | None":
+        """The attempt at which `job` was scheduled to kill its worker,
+        walking the injector's pure plan through worker-side exception
+        retries; None when the job was not doomed to die."""
+        if self.fault_injector is None:
+            return None
+        attempt = job.attempt
+        while attempt < policy.max_attempts:
+            kind = self.fault_injector.plan(job.key, attempt)
+            if kind == "kill":
+                return attempt
+            if kind == "exception":    # the worker retries these locally
+                attempt += 1
+                continue
+            return None                # clean attempt (or a mere delay)
+        return None
+
+    def _fail(self, job: _PoolJob, error_type: str,
+              message: str) -> PointOutcome:
+        return PointOutcome(
+            key=job.key, n_retries=job.n_retries,
+            failure=FailureRecord(
+                key=job.key, workload=job.point.workload_name,
+                arch=job.point.arch.name, error_type=error_type,
+                message=message, traceback="", attempts=job.attempt,
+                spec=job.point.spec_dict()))
+
+    def _charge(self, job: _PoolJob, policy: RetryPolicy, new_attempt: int,
+                error_type: str, message: str) -> None:
+        """Burn attempts on `job` up to `new_attempt`; quarantine it when
+        the budget is gone, otherwise mark the parent-side retry."""
+        burned = new_attempt - job.attempt
+        job.attempt = new_attempt
+        if job.attempt >= policy.max_attempts:
+            job.outcome = self._fail(job, error_type, message)
+        else:
+            job.n_retries += burned
+
+    def _rebuild(self, jobs: "list[_PoolJob]", futures: dict, head: int,
+                 policy: RetryPolicy) -> None:
+        """Survive `BrokenProcessPool`: rebuild the spawn pool and
+        resubmit every un-yielded, un-finished point."""
+        old = self._pool
+        self._pool = self._new_pool()
+        old.shutdown(wait=False, cancel_futures=True)
+        blamed = 0
+        for j in range(head, len(jobs)):
+            job = jobs[j]
+            if job.outcome is not None:
+                continue
+            died_at = self._planned_death(job, policy)
+            if died_at is not None:
+                blamed += 1
+                self._charge(job, policy, died_at + 1, "WorkerKilled",
+                             f"worker process died (injected kill at "
+                             f"attempt {died_at})")
+        if blamed == 0:
+            # real, unplanned death: attribution is unknowable, so charge
+            # the head point (whose result we were awaiting)
+            self._charge(jobs[head], policy, jobs[head].attempt + 1,
+                         "BrokenProcessPool",
+                         "worker process died abruptly")
+        for j in range(head, len(jobs)):
+            job = jobs[j]
+            if job.outcome is not None:
+                continue
+            fut = futures.get(j)
+            if fut is not None and fut.done() and not fut.cancelled() \
+                    and fut.exception() is None:
+                continue               # its result survived the pool break
+            futures[j] = self._submit(job)
 
     def stream(self, points, warm_lookup):
         self._cancelled = False     # re-arm: executors are reusable
         self._pool = None
         if not points:
             return
-        jobs = [(p, tuple(tuple(int(x) for x in a) for a in warm_lookup(p)))
-                for p in points]
-        # spawn, not fork: callers routinely have jax (multithreaded)
-        # imported, and forking a threaded process can deadlock
-        ctx = multiprocessing.get_context("spawn")
-        self._pool = ProcessPoolExecutor(max_workers=self.max_workers,
-                                         mp_context=ctx)
+        policy = self.retry_policy or NO_RETRY
+        jobs = [_PoolJob(p, tuple(tuple(int(x) for x in a)
+                                  for a in warm_lookup(p))) for p in points]
+        self._pool = self._new_pool()
+        futures: dict[int, object] = {}
         try:
-            futures = [self._pool.submit(_process_worker, job) for job in jobs]
-            for future in futures:
+            for i, job in enumerate(jobs):
+                futures[i] = self._submit(job)
+            i = 0
+            while i < len(jobs):
                 if self._cancelled:
                     return
-                yield ExplorationRecord.from_dict(future.result())
+                job = jobs[i]
+                if job.outcome is not None:    # resolved during a rebuild
+                    yield job.outcome
+                    i += 1
+                    continue
+                try:
+                    env = futures[i].result(timeout=self.deadline_s)
+                except _FutureTimeout:
+                    # straggler: re-dispatch as a fresh attempt; the old
+                    # future's result, if it ever lands, is ignored
+                    self._charge(job, policy, job.attempt + 1,
+                                 "DeadlineExceeded",
+                                 f"no result within {self.deadline_s:g}s")
+                    if job.outcome is None:
+                        futures[i] = self._submit(job)
+                    continue
+                except BrokenProcessPool:
+                    self._rebuild(jobs, futures, i, policy)
+                    continue
+                except Exception as e:  # infrastructure failure (pickling,
+                    # worker teardown, ...): quarantine, don't abort
+                    self._charge(job, policy, policy.max_attempts,
+                                 type(e).__name__, str(e))
+                    yield job.outcome
+                    i += 1
+                    continue
+                outcome = PointOutcome.from_jsonable(env)
+                outcome.n_retries += job.n_retries
+                yield outcome
+                i += 1
         finally:
             self._pool.shutdown(wait=not self._cancelled,
                                 cancel_futures=self._cancelled)
@@ -589,7 +976,15 @@ class _SweepState:
     store_hits: int = 0              # store hits actually delivered
     n_computed: int = 0
     n_warm_started: int = 0
+    n_failed: int = 0                # points quarantined this sweep
+    n_retried: int = 0               # extra attempts burned on recovery
+    failures: list = dataclasses.field(default_factory=list)
     stop_reason: str | None = None
+
+
+# sentinel marking a walk key whose point was quarantined (duplicate walk
+# positions for the key must not pull another outcome from the executor)
+_QUARANTINED = object()
 
 
 class ExplorationSession:
@@ -616,20 +1011,31 @@ class ExplorationSession:
     """
 
     def __init__(self, cache_dir: str | None = None, cache_limit: int = 32,
-                 max_workers: int | None = None, warm_start: bool = False):
+                 max_workers: int | None = None, warm_start: bool = False,
+                 retry_policy: RetryPolicy | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 deadline_s: float | None = None, repair: bool = False):
         self._graphs = FifoCache(cache_limit)
         # evicted engines fold their checkpoint counters into a session
         # total, so `checkpoint_stats()` covers the whole session lifetime
         # and not just the engines still resident in the FIFO
         self._ckpt_evicted: dict[str, int] = {}
         self._engines = FifoCache(cache_limit, on_evict=self._fold_ckpt_stats)
-        self.store = ResultStore(cache_dir)
+        self.store = ResultStore(cache_dir, repair=repair)
         self.max_workers = max_workers
         # warm_start seeds each point's GA from the best stored allocations
         # of neighboring points. Off by default: warm-started results depend
         # on store contents, so they are no longer a pure function of the
         # point's content key (records carry `ga_warm_starts` for auditing).
         self.warm_start = warm_start
+        # resilience: per-point exceptions are retried under `retry_policy`
+        # (seeded deterministic backoff) and quarantined as FailureRecords
+        # on exhaustion — a fault degrades the sweep, never aborts it.
+        # `fault_injector` (tests/benches) injects a seeded fault schedule;
+        # `deadline_s` bounds each process-executor result wait.
+        self.retry_policy = retry_policy
+        self.fault_injector = fault_injector
+        self.deadline_s = deadline_s
 
     # ---- cache introspection --------------------------------------------
     @property
@@ -895,6 +1301,77 @@ class ExplorationSession:
             spec=point.spec_dict(),
             ga_warm_starts=len(initial_allocations))
 
+    def _compute_outcome(self, point: DesignPoint, initial_allocations=(),
+                         retry_policy: RetryPolicy | None = None,
+                         fault_injector: FaultInjector | None = None,
+                         start_attempt: int = 0,
+                         allow_kill: bool = False) -> PointOutcome:
+        """`_compute_record` wrapped in the retry/quarantine loop.
+
+        Exceptions — injected or real — burn attempts against the
+        `RetryPolicy` budget (defaulting to the session's), sleeping the
+        policy's seeded deterministic backoff between tries; a point that
+        exhausts the budget returns a `FailureRecord` outcome instead of
+        raising, so one bad point degrades the sweep without aborting it.
+        `allow_kill` lets injected kill faults actually SIGKILL the
+        process (pool workers only)."""
+        policy = retry_policy or self.retry_policy or NO_RETRY
+        injector = fault_injector if fault_injector is not None \
+            else self.fault_injector
+        key = point.content_key()
+        attempt, n_retries = start_attempt, 0
+        while True:
+            try:
+                if injector is not None:
+                    injector.fire(key, attempt, allow_kill=allow_kill)
+                record = self._compute_record(
+                    point, initial_allocations=initial_allocations)
+                return PointOutcome(key=key, record=record,
+                                    n_retries=n_retries)
+            except Exception as exc:
+                attempt += 1
+                if not policy.should_retry(attempt):
+                    return PointOutcome(
+                        key=key, n_retries=n_retries,
+                        failure=FailureRecord.from_exception(
+                            point, exc, attempts=attempt))
+                n_retries += 1
+                delay = policy.delay_s(key, attempt)
+                if delay > 0:
+                    time.sleep(delay)
+
+    def _store_put_resilient(
+            self, record: ExplorationRecord,
+    ) -> "tuple[FailureRecord | None, int]":
+        """Persist a record, surviving injected store-corruption faults.
+
+        A planned ``corrupt`` fault tears the append mid-line (the crash
+        model) — recovery truncates the torn tail and retries the write
+        under the retry budget.  Returns ``(failure, n_retries)``; the
+        failure is None on success."""
+        injector, policy = self.fault_injector, self.retry_policy or NO_RETRY
+        if injector is None or self.store.path is None:
+            self.store.put(record)
+            return None, 0
+        attempt, n_retries = 0, 0
+        while True:
+            if injector.plan_corrupt(record.key, attempt):
+                self.store.append_torn(json.dumps(record.to_dict()) + "\n")
+                attempt += 1
+                if not policy.should_retry(attempt):
+                    return FailureRecord(
+                        key=record.key, workload=record.workload,
+                        arch=record.arch, error_type="StoreCorruption",
+                        message="store append torn by injected corruption "
+                                "and retry budget exhausted",
+                        traceback="", attempts=attempt,
+                        spec=record.spec), n_retries
+                n_retries += 1
+                self.store.repair_tail()
+                continue
+            self.store.put(record)
+            return None, n_retries
+
     def _make_executor(self, executor: "str | SweepExecutor",
                        max_workers: int | None) -> SweepExecutor:
         if isinstance(executor, SweepExecutor):
@@ -902,7 +1379,10 @@ class ExplorationSession:
         if executor == "serial":
             return SerialExecutor(self)
         if executor == "process":
-            return ProcessExecutor(max_workers or self.max_workers)
+            return ProcessExecutor(max_workers or self.max_workers,
+                                   retry_policy=self.retry_policy,
+                                   fault_injector=self.fault_injector,
+                                   deadline_s=self.deadline_s)
         raise ValueError(f"unknown executor {executor!r} "
                          "(expected 'serial' or 'process')")
 
@@ -940,19 +1420,47 @@ class ExplorationSession:
         def warm_lookup(p: DesignPoint):
             return self.warm_start_allocations(p) if warm else ()
 
+        def quarantine(failure: FailureRecord) -> bool:
+            """Record a quarantined point; True when a policy fires on it."""
+            served[failure.key] = _QUARANTINED
+            state.n_failed += 1
+            state.failures.append(failure)
+            self.store.put_failure(failure)
+            for policy in policies:
+                observe = getattr(policy, "update_failure", None)
+                if callable(observe) and observe(failure):
+                    state.stop_reason = getattr(
+                        policy, "reason", None) or type(policy).__name__
+                    return True
+            return False
+
         def stream() -> Iterator[ExplorationRecord]:
             computed = backend.stream(todo, warm_lookup)
             delivered_hits: set[str] = set()
             try:
                 for key in walk:
                     rec = served.get(key)
+                    if rec is _QUARANTINED:
+                        continue       # duplicate walk slot of a failure
                     if rec is None:
-                        rec = next(computed)
-                        if rec.key != key:  # executor broke submission order
+                        outcome = next(computed)
+                        if outcome.key != key:  # broke submission order
                             raise RuntimeError(
-                                f"executor yielded record {rec.key} at walk "
-                                f"position expecting {key}")
-                        self.store.put(rec)
+                                f"executor yielded point {outcome.key} at "
+                                f"walk position expecting {key}")
+                        state.n_retried += outcome.n_retries
+                        if outcome.failure is not None:
+                            if quarantine(outcome.failure):
+                                return
+                            continue   # degraded, not aborted: next point
+                        rec = outcome.record
+                        put_failure, put_retries = \
+                            self._store_put_resilient(rec)
+                        state.n_retried += put_retries
+                        if put_failure is not None:
+                            if quarantine(put_failure):
+                                return
+                            continue
                         served[key] = rec
                         state.n_computed += 1
                         if rec.ga_warm_starts:
@@ -1001,6 +1509,12 @@ class ExplorationSession:
         observed after every record; the first to fire ends the sweep and
         cancels outstanding points (see `run_async` for streaming access).
 
+        Per-point failures are never fatal: points are retried per the
+        session's `retry_policy` and, once the budget is exhausted,
+        quarantined as `FailureRecord`s (persisted beside the store,
+        reported via `SweepResult.n_failed` / `.n_retried` / `.failures`)
+        while the sweep degrades gracefully and keeps going.
+
         `warm_start` (default: the session's setting) seeds each point's GA
         with the best stored allocations of neighboring points. The serial
         executor looks neighbors up as points complete, so later points in
@@ -1014,7 +1528,7 @@ class ExplorationSession:
                                           warm_start, order, policies,
                                           progress)
         records = list(stream)
-        n_cancelled = (len(state.todo) - state.n_computed) \
+        n_cancelled = (len(state.todo) - state.n_computed - state.n_failed) \
             + (state.planned_store_hits - state.store_hits)
         return SweepResult(records=records,
                            n_scheduled=state.n_computed,
@@ -1022,7 +1536,10 @@ class ExplorationSession:
                            wall_s=time.perf_counter() - t0,
                            n_warm_started=state.n_warm_started,
                            n_cancelled=n_cancelled,
-                           stop_reason=state.stop_reason)
+                           stop_reason=state.stop_reason,
+                           n_failed=state.n_failed,
+                           n_retried=state.n_retried,
+                           failures=list(state.failures))
 
     def run_async(
         self,

@@ -1,0 +1,556 @@
+"""Fault-tolerant sweep runtime: deterministic fault injection, retry and
+quarantine semantics, crash-safe stores, and the golden bit-identity
+invariant — under any seeded fault schedule within the retry budget, the
+healthy record set equals a fault-free serial run on every backend.
+
+Fast deterministic tests carry the tier1 marker; the process-pool and
+crash-restart tests (real worker kills, real SIGKILL of a shard
+subprocess) are unmarked and run with the full suite / ``make faults``.
+"""
+import importlib.util
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.api import (BudgetPolicy, DesignSpace, ExplorationSession,
+                       FailureRecord, FaultInjector, GAConfig,
+                       HeartbeatMonitor, InjectedFault, PointOutcome,
+                       ResultStore, RetryPolicy, StoreCorruptionError,
+                       StoreLockError, build_manifest, merge_stores,
+                       run_shard)
+from repro.api.resilience import _unit_hash
+from repro.api.session import _demo_records
+from repro.configs.paper_workloads import fsrcnn
+from repro.hw.catalog import mc_hom_tpu, sc_eye, sc_tpu
+
+tier1 = pytest.mark.tier1
+
+GA = GAConfig(pop_size=4, generations=2)
+
+
+def _space(**kw):
+    base = dict(workloads={"fsrcnn": fsrcnn()},
+                archs={"SC:TPU": sc_tpu, "SC:Eye": sc_eye,
+                       "MC:HomTPU": mc_hom_tpu},
+                granularities=["layer", ("tile", 8, 1)], ga=GA)
+    base.update(kw)
+    return DesignSpace(**base)
+
+
+def _metric_seq(records):
+    return [(r.key, r.latency_cc, r.energy_pj, r.edp, r.allocation)
+            for r in records]
+
+
+def _metric_set(records):
+    return set(_metric_seq(records))
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Fault-free serial run of the standard test space (the golden set)."""
+    return ExplorationSession().run(_space())
+
+
+# ---------------------------------------------------------------------------
+# fault injector / retry policy: pure, seeded, deterministic
+# ---------------------------------------------------------------------------
+
+@tier1
+def test_unit_hash_is_pure_and_uniformish():
+    draws = [_unit_hash(0, "exception", f"k{i}", 0) for i in range(200)]
+    assert draws == [_unit_hash(0, "exception", f"k{i}", 0)
+                     for i in range(200)]
+    assert all(0.0 <= d < 1.0 for d in draws)
+    # a 10% rate should hit *roughly* 10% of keys — loose sanity bound
+    assert 5 <= sum(d < 0.1 for d in draws) <= 40
+
+
+@tier1
+def test_injector_plan_is_deterministic_and_gated():
+    inj = FaultInjector(seed=3, exception_rate=0.5, kill_rate=0.25,
+                        delay_rate=0.25, max_faults_per_point=2)
+    again = FaultInjector.from_dict(inj.to_dict())
+    keys = [f"point{i}" for i in range(50)]
+    plans = [[inj.plan(k, a) for a in range(4)] for k in keys]
+    assert plans == [[again.plan(k, a) for a in range(4)] for k in keys]
+    # the gate guarantees recovery: attempts >= max_faults_per_point are clean
+    assert all(p[2] is None and p[3] is None for p in plans)
+    # kill outranks exception outranks delay: at most one fault per attempt
+    assert {kind for p in plans for kind in p} <= {
+        None, "kill", "exception", "delay"}
+
+
+@tier1
+def test_injector_fire_raises_and_degrades_kill():
+    inj = FaultInjector(seed=0, exception_rate=1.0)
+    with pytest.raises(InjectedFault):
+        inj.fire("k", 0)
+    killer = FaultInjector(seed=0, kill_rate=1.0)
+    with pytest.raises(InjectedFault, match="degraded"):
+        killer.fire("k", 0, allow_kill=False)   # serial: never SIGKILL
+    assert FaultInjector(seed=0).plan("k", 0) is None
+
+
+@tier1
+def test_retry_policy_backoff_is_seeded_not_wall_clock():
+    p = RetryPolicy(max_attempts=4, backoff_s=0.5, jitter=0.8, seed=11)
+    delays = [p.delay_s("k", a) for a in (1, 2, 3)]
+    assert delays == [RetryPolicy.from_dict(p.to_dict()).delay_s("k", a)
+                      for a in (1, 2, 3)]
+    assert all(d > 0 for d in delays)
+    assert p.delay_s("k", 1) != p.delay_s("other", 1)  # per-key jitter
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+@tier1
+def test_failure_record_and_outcome_round_trip():
+    f = FailureRecord(key="k", workload="w", arch="A",
+                      error_type="InjectedFault", message="boom",
+                      traceback="tb", attempts=3, spec={"workload": "w"})
+    assert FailureRecord.from_dict(json.loads(json.dumps(f.to_dict()))) == f
+    o = PointOutcome(key="k", failure=f, n_retries=2)
+    back = PointOutcome.from_jsonable(json.loads(json.dumps(o.to_jsonable())))
+    assert (back.ok, back.failure, back.n_retries) == (False, f, 2)
+
+
+# ---------------------------------------------------------------------------
+# golden invariant: healthy records bit-identical to fault-free serial
+# ---------------------------------------------------------------------------
+
+@tier1
+def test_serial_faulted_run_is_bit_identical(reference):
+    inj = FaultInjector(seed=1, exception_rate=0.5, max_faults_per_point=2)
+    sess = ExplorationSession(retry_policy=RetryPolicy(max_attempts=3),
+                              fault_injector=inj)
+    sweep = sess.run(_space())
+    assert _metric_seq(sweep.records) == _metric_seq(reference.records)
+    assert sweep.n_failed == 0 and not sweep.failures
+    assert sweep.n_retried > 0          # the schedule actually fired
+
+
+@tier1
+def test_store_corruption_faults_recover_bit_identical(tmp_path, reference):
+    inj = FaultInjector(seed=5, corrupt_rate=0.5, max_faults_per_point=2)
+    sess = ExplorationSession(cache_dir=str(tmp_path),
+                              retry_policy=RetryPolicy(max_attempts=3),
+                              fault_injector=inj)
+    sweep = sess.run(_space())
+    assert _metric_seq(sweep.records) == _metric_seq(reference.records)
+    assert sweep.n_failed == 0 and sweep.n_retried > 0
+    # the store on disk is clean after recovery: reload sees every record
+    reloaded = ResultStore(str(tmp_path))
+    assert _metric_set(reloaded.values()) == _metric_set(reference.records)
+    assert reloaded.verify()["n_records"] == len(reference.records)
+
+
+@tier1
+def test_budget_exhaustion_quarantines_not_aborts(reference):
+    # every attempt faults and there is no retry budget: all quarantined
+    sess = ExplorationSession(
+        fault_injector=FaultInjector(seed=0, exception_rate=1.0))
+    sweep = sess.run(_space())
+    assert len(sweep.records) == 0
+    assert sweep.n_failed == len(reference.records)
+    assert sweep.n_cancelled == 0
+    assert all(f.error_type == "InjectedFault" and f.attempts == 1
+               for f in sweep.failures)
+    assert {f.key for f in sweep.failures} == \
+        {r.key for r in reference.records}
+
+
+@tier1
+def test_partial_quarantine_keeps_healthy_points(reference):
+    # ~half the points fault on every attempt -> quarantined; rest identical
+    inj = FaultInjector(seed=9, exception_rate=0.5)   # no gate: never recovers
+    sess = ExplorationSession(retry_policy=RetryPolicy(max_attempts=2),
+                              fault_injector=inj)
+    sweep = sess.run(_space())
+    assert 0 < sweep.n_failed < len(reference.records)
+    assert len(sweep.records) + sweep.n_failed == len(reference.records)
+    ref = {r.key: m for r, m in zip(reference.records,
+                                    _metric_seq(reference.records))}
+    assert all(m == ref[r.key]
+               for r, m in zip(sweep.records, _metric_seq(sweep.records)))
+    assert all(f.attempts == 2 and f.traceback for f in sweep.failures)
+
+
+@tier1
+def test_run_async_with_policies_deterministic_under_faults(reference):
+    def stream_with(sess):
+        return list(sess.run_async(_space(),
+                                   policies=[BudgetPolicy(max_records=3)]))
+
+    clean = stream_with(ExplorationSession())
+    inj = FaultInjector(seed=4, exception_rate=0.6, max_faults_per_point=1)
+    faulted = stream_with(ExplorationSession(
+        retry_policy=RetryPolicy(max_attempts=2), fault_injector=inj))
+    assert _metric_seq(faulted) == _metric_seq(clean)
+    assert len(faulted) == 3
+
+
+@tier1
+def test_policies_see_failure_events():
+    budget = BudgetPolicy(max_failures=2)
+    sess = ExplorationSession(
+        fault_injector=FaultInjector(seed=0, exception_rate=1.0))
+    sweep = sess.run(_space(), policies=[budget])
+    assert sweep.n_failed == 2
+    assert sweep.stop_reason == "budget: 2 quarantined points"
+    # vanilla policies ignore failures (base update_failure is a no-op)
+    sess2 = ExplorationSession(
+        fault_injector=FaultInjector(seed=0, exception_rate=1.0))
+    sweep2 = sess2.run(_space(), policies=[BudgetPolicy(max_records=99)])
+    assert sweep2.stop_reason is None
+
+
+@tier1
+def test_heartbeat_monitor_counts_and_finalizes(tmp_path):
+    hb_path = str(tmp_path / "hb.json")
+    monitor = HeartbeatMonitor(hb_path, total=4)
+    sess = ExplorationSession(
+        retry_policy=RetryPolicy(max_attempts=2),
+        fault_injector=FaultInjector(seed=9, exception_rate=0.5))
+    sweep = sess.run(_space(), policies=[monitor])
+    beat = json.load(open(hb_path))
+    assert beat["done"] == len(sweep.records)
+    assert beat["failed"] == sweep.n_failed > 0
+    monitor.finalize("done")
+    assert json.load(open(hb_path))["status"] == "done"
+
+
+# ---------------------------------------------------------------------------
+# crash-safe stores: torn tails, mid-file corruption, locking
+# ---------------------------------------------------------------------------
+
+def _seeded_store(path) -> ResultStore:
+    store = ResultStore(str(path))
+    for r in _demo_records():
+        store.put(r)
+    return store
+
+
+@tier1
+def test_torn_tail_is_dropped_and_truncated(tmp_path):
+    store = _seeded_store(tmp_path / "s")
+    store.append_torn(json.dumps(_demo_records()[0].to_dict()) + "\n")
+    size_torn = os.path.getsize(store.path)
+    reloaded = ResultStore(str(tmp_path / "s"))
+    assert len(reloaded) == 3                     # torn line dropped...
+    assert os.path.getsize(store.path) < size_torn   # ...and truncated away
+    # the next append starts on a clean line: no interleaving with the tear
+    reloaded.put(_demo_records()[0])
+    assert ResultStore(str(tmp_path / "s")).verify()["torn_tail"] == 0
+
+
+@tier1
+def test_midfile_corruption_raises_unless_repaired(tmp_path):
+    store = _seeded_store(tmp_path / "s")
+    lines = open(store.path).read().splitlines(True)
+    lines.insert(1, "NOT JSON {{{\n")
+    lines.insert(3, '{"valid_json": "but not a record"}\n')
+    with open(store.path, "w") as f:
+        f.writelines(lines)
+    with pytest.raises(StoreCorruptionError, match="malformed"):
+        ResultStore(str(tmp_path / "s"))
+    with pytest.raises(StoreCorruptionError):
+        ResultStore.verify_path(str(tmp_path / "s"))
+    with pytest.warns(RuntimeWarning, match="quarantined 2"):
+        repaired = ResultStore(str(tmp_path / "s"), repair=True)
+    assert len(repaired) == 3
+    bad = open(store.path + ".bad").read()
+    assert "NOT JSON" in bad and "valid_json" in bad
+    # the rewritten file is clean: strict reload now succeeds
+    assert len(ResultStore(str(tmp_path / "s"))) == 3
+
+
+@tier1
+def test_verify_reports_counts_and_torn_tail(tmp_path):
+    store = _seeded_store(tmp_path / "s")
+    store.put_failure(FailureRecord(
+        key="zz", workload="w", arch="A", error_type="X", message="m",
+        traceback="t", attempts=1))
+    assert store.verify() == {"n_records": 3, "n_failures": 1,
+                              "torn_tail": 0}
+    store.append_torn("garbage-without-newline")
+    assert ResultStore.verify_path(str(tmp_path / "s"))["torn_tail"] == 1
+
+
+@tier1
+def test_concurrent_appends_do_not_interleave(tmp_path):
+    # two handles on one store file, alternating appends: every line lands
+    # whole (single O_APPEND write under an advisory lock)
+    a = ResultStore(str(tmp_path / "s"))
+    b = ResultStore(str(tmp_path / "s"))
+    r0, r1, r2 = _demo_records()
+    for rec in (r0, r1, r2):
+        a.put(rec)
+        b.put(rec)
+    report = ResultStore.verify_path(str(tmp_path / "s"))
+    assert report == {"n_records": 6, "n_failures": 0, "torn_tail": 0}
+    assert len(ResultStore(str(tmp_path / "s"))) == 3   # dedup by key
+
+
+@tier1
+def test_lock_failure_errors_loudly(tmp_path, monkeypatch):
+    import repro.api.session as session_mod
+
+    def deny(fd, op):
+        raise OSError("lock denied")
+
+    store = _seeded_store(tmp_path / "s")
+    monkeypatch.setattr(session_mod.fcntl, "flock", deny)
+    with pytest.raises(StoreLockError, match="lock"):
+        store.put(_demo_records()[0])
+
+
+@tier1
+def test_failures_sidecar_round_trip_and_supersession(tmp_path):
+    store = ResultStore(str(tmp_path / "s"))
+    r0, r1, _ = _demo_records()
+    fail_r1 = FailureRecord(key=r1.key, workload=r1.workload, arch=r1.arch,
+                            error_type="InjectedFault", message="boom",
+                            traceback="tb", attempts=2)
+    store.put(r0)
+    store.put_failure(fail_r1)
+    store.put_failure(FailureRecord(  # stale: healthy record already exists
+        key=r0.key, workload=r0.workload, arch=r0.arch, error_type="X",
+        message="m", traceback="t", attempts=1))
+    assert [f.key for f in store.failures()] == [r1.key]
+    reloaded = ResultStore(str(tmp_path / "s"))
+    assert [f.key for f in reloaded.failures()] == [r1.key]
+    # a later healthy record supersedes the persisted failure
+    reloaded.put(r1)
+    assert reloaded.failures() == []
+    assert ResultStore(str(tmp_path / "s")).failures() == []
+
+
+@tier1
+def test_merge_folds_failures_first_wins(tmp_path):
+    r0, r1, r2 = _demo_records()
+    a = ResultStore(str(tmp_path / "a"))
+    a.put(r0)
+    a.put_failure(FailureRecord(key=r1.key, workload=r1.workload,
+                                arch=r1.arch, error_type="A", message="first",
+                                traceback="t", attempts=1))
+    b = ResultStore(str(tmp_path / "b"))
+    b.put(r2)
+    b.put_failure(FailureRecord(key=r1.key, workload=r1.workload,
+                                arch=r1.arch, error_type="B", message="second",
+                                traceback="t", attempts=3))
+    merged = ResultStore.merge(a, b)
+    assert {r.key for r in merged.values()} == {r0.key, r2.key}
+    assert [f.message for f in merged.failures()] == ["first"]
+    # a healthy record for the key in any source supersedes every failure
+    c = ResultStore(str(tmp_path / "c"))
+    c.put(r1)
+    healthy = ResultStore.merge(a, b, c)
+    assert len(healthy) == 3 and healthy.failures() == []
+
+
+@tier1
+def test_merge_accepts_failures_only_shard(tmp_path):
+    a = ResultStore(str(tmp_path / "a"))   # every point quarantined
+    r0, _, _ = _demo_records()
+    a.put_failure(FailureRecord(key=r0.key, workload=r0.workload,
+                                arch=r0.arch, error_type="X", message="m",
+                                traceback="t", attempts=1))
+    merged = merge_stores(None, str(tmp_path / "a"))
+    assert len(merged) == 0 and len(merged.failures()) == 1
+
+
+# ---------------------------------------------------------------------------
+# run_shard: retries knob, heartbeat, quarantine exit path
+# ---------------------------------------------------------------------------
+
+def _load_tool(name):
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(root, "tools", f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@tier1
+def test_run_shard_retries_and_heartbeat(tmp_path, reference):
+    m = build_manifest(_space())
+    inj = FaultInjector(seed=2, exception_rate=0.6, max_faults_per_point=2)
+    stores = []
+    for k in range(2):
+        out = str(tmp_path / f"shard{k}")
+        sweep = run_shard(m, cache_dir=out, shard=(k, 2), retries=2,
+                          fault_injector=inj,
+                          heartbeat=str(tmp_path / f"hb{k}.json"))
+        assert sweep.n_failed == 0
+        beat = json.load(open(tmp_path / f"hb{k}.json"))
+        assert beat["status"] == "done" and beat["done"] == len(sweep)
+        assert (beat["shard_index"], beat["n_shards"]) == (k, 2)
+        stores.append(out)
+    merged = merge_stores(str(tmp_path / "merged"), *stores)
+    assert _metric_set(merged.values()) == _metric_set(reference.records)
+
+
+@tier1
+def test_run_shard_cli_exit_3_on_quarantine(tmp_path, monkeypatch, capsys):
+    import repro.api.distributed as dist
+    cli = _load_tool("run_shard")
+    mpath = str(tmp_path / "sweep.json")
+    build_manifest(_space()).save(mpath)
+
+    real = dist.run_shard
+
+    def faulted(*args, **kw):   # the CLI has no injector flag by design
+        kw["fault_injector"] = FaultInjector(seed=0, exception_rate=1.0)
+        return real(*args, **kw)
+
+    monkeypatch.setattr(dist, "run_shard", faulted)
+    rc = cli.main([mpath, "--out", str(tmp_path / "sh")])
+    assert rc == 3
+    err = capsys.readouterr().err
+    assert "QUARANTINED" in err and "InjectedFault" in err
+    assert os.path.exists(tmp_path / "sh" / "failures.jsonl")
+    assert os.path.exists(tmp_path / "sh" / "heartbeat.json")
+
+
+@tier1
+def test_merge_cli_verify_and_repair(tmp_path, capsys):
+    cli = _load_tool("merge_stores")
+    _seeded_store(tmp_path / "a")
+    rc = cli.main([str(tmp_path / "m"), str(tmp_path / "a"), "--verify"])
+    assert rc == 0
+    assert "ok" in capsys.readouterr().out
+    # corrupt a mid-file line: verify refuses, repair quarantines
+    path = ResultStore.resolve_path(str(tmp_path / "a"))
+    lines = open(path).read().splitlines(True)
+    lines.insert(0, "garbage\n")
+    with open(path, "w") as f:
+        f.writelines(lines)
+    rc = cli.main([str(tmp_path / "m2"), str(tmp_path / "a"), "--verify"])
+    assert rc == 4
+    assert "CORRUPT" in capsys.readouterr().err
+    with pytest.warns(RuntimeWarning):
+        rc = cli.main([str(tmp_path / "m3"), str(tmp_path / "a"),
+                       "--verify", "--repair"])
+    assert rc == 0
+    assert len(ResultStore(str(tmp_path / "m3"))) == 3
+
+
+# ---------------------------------------------------------------------------
+# process executor: worker kills, pool rebuild, straggler deadlines
+# (unmarked: real subprocess work, runs in the full suite / `make faults`)
+# ---------------------------------------------------------------------------
+
+def test_process_pool_survives_worker_kills(reference):
+    # every point's first attempt SIGKILLs its worker: the pool is rebuilt,
+    # unfinished points resubmitted, and the sweep still converges exactly
+    inj = FaultInjector(seed=3, kill_rate=1.0, max_faults_per_point=1)
+    sess = ExplorationSession(retry_policy=RetryPolicy(max_attempts=2),
+                              fault_injector=inj)
+    sweep = sess.run(_space(), executor="process", max_workers=2)
+    assert _metric_seq(sweep.records) == _metric_seq(reference.records)
+    assert sweep.n_failed == 0
+    assert sweep.n_retried >= len(reference.records)
+
+
+def test_process_pool_mixed_fault_schedule(reference):
+    inj = FaultInjector(seed=7, exception_rate=0.4, kill_rate=0.3,
+                        max_faults_per_point=2)
+    sess = ExplorationSession(retry_policy=RetryPolicy(max_attempts=3),
+                              fault_injector=inj)
+    sweep = sess.run(_space(), executor="process", max_workers=2)
+    assert _metric_seq(sweep.records) == _metric_seq(reference.records)
+    assert sweep.n_failed == 0
+
+
+def test_process_pool_kill_without_budget_quarantines(reference):
+    inj = FaultInjector(seed=3, kill_rate=1.0)   # no gate: kills every try
+    sess = ExplorationSession(fault_injector=inj)
+    sweep = sess.run(_space(granularities=["layer"]),
+                     executor="process", max_workers=2)
+    assert len(sweep.records) == 0
+    assert sweep.n_failed == 3
+    assert all(f.attempts >= 1 for f in sweep.failures)
+
+
+def test_deadline_redispatches_stragglers(reference):
+    # every first attempt sleeps far past the deadline; the parent times
+    # out, re-dispatches, and the fresh attempt (gated clean) wins
+    inj = FaultInjector(seed=0, delay_rate=1.0, delay_s=20.0,
+                        max_faults_per_point=1)
+    sess = ExplorationSession(retry_policy=RetryPolicy(max_attempts=3),
+                              fault_injector=inj, deadline_s=1.0)
+    space = _space(archs={"SC:TPU": sc_tpu}, granularities=["layer"])
+    t0 = time.monotonic()
+    sweep = sess.run(space, executor="process", max_workers=2)
+    ref = ExplorationSession().run(space)
+    assert _metric_seq(sweep.records) == _metric_seq(ref.records)
+    assert sweep.n_failed == 0 and sweep.n_retried >= 1
+    assert time.monotonic() - t0 < 20.0    # did not wait out the straggler
+
+
+# ---------------------------------------------------------------------------
+# crash-restart: SIGKILL a run_shard subprocess mid-sweep, restart, merge
+# ---------------------------------------------------------------------------
+
+_DRIVER = """
+import sys
+from repro.api import FaultInjector, run_shard
+# delay every point so the parent can reliably kill us mid-sweep
+inj = FaultInjector(seed=0, delay_rate=1.0, delay_s=0.5)
+run_shard(sys.argv[1], cache_dir=sys.argv[2],
+          fault_injector=inj, heartbeat=sys.argv[3])
+"""
+
+
+def test_sigkill_crash_restart_is_bit_identical(tmp_path, reference):
+    m = build_manifest(_space())
+    mpath = str(tmp_path / "sweep.json")
+    m.save(mpath)
+    out = str(tmp_path / "shard")
+    hb_path = str(tmp_path / "hb.json")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen([sys.executable, "-c", _DRIVER, mpath, out,
+                             hb_path], env=env,
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    try:
+        # wait until the shard is demonstrably mid-sweep (>= 1 point done),
+        # then SIGKILL it — possibly mid-append, which is the point
+        deadline = time.monotonic() + 120.0
+        while time.monotonic() < deadline:
+            if proc.poll() is not None:
+                break
+            try:
+                if json.load(open(hb_path))["done"] >= 1:
+                    break
+            except (FileNotFoundError, json.JSONDecodeError, KeyError):
+                pass
+            time.sleep(0.02)
+        killed = proc.poll() is None
+        if killed:
+            proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    assert killed, "shard finished before it could be killed"
+    # whatever landed before the kill is loadable (a torn tail at worst)...
+    partial = ResultStore(out)
+    assert 1 <= len(partial) < len(reference.records)
+    # ...and the restart is incremental: done points come from the store
+    sweep = run_shard(mpath, cache_dir=out)
+    assert sweep.n_from_store == len(partial)
+    assert sweep.n_failed == 0
+    merged = ResultStore(out)
+    assert _metric_set(merged.values()) == _metric_set(reference.records)
+    assert merged.verify()["n_records"] >= len(reference.records)

@@ -29,6 +29,7 @@ DOCTEST_MODULES = [
     "repro.api.designspace",
     "repro.api.distributed",
     "repro.api.policies",
+    "repro.api.resilience",
     "repro.api.session",
     "repro.hw.topology",
     "repro.hw.catalog",
