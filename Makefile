@@ -1,9 +1,14 @@
 PY := PYTHONPATH=src python
 
-.PHONY: all test tier1 docs bench bench-quick bench-full bench-list faults
+.PHONY: all lint test tier1 docs bench bench-quick bench-full bench-list faults
 
-# default flow: the full suite plus the docs gate (link check + doctests)
-all: test docs
+# default flow: static checks, the full suite, and the docs gate
+all: lint test docs
+
+# determinism linter over src/repro (exit 5 on unallowed violations);
+# `--format json` is available for machine consumption
+lint:
+	$(PY) tools/check_static.py --strict
 
 # full suite (includes the jax model/train/serve substrate)
 test:

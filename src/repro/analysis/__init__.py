@@ -1,0 +1,3 @@
+"""Offline analysis passes: HLO cost attribution, roofline estimates, and
+the static-analysis layer (`repro.analysis.staticcheck`) that machine-checks
+the determinism invariants the rest of the repo promises."""

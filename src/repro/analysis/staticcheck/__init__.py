@@ -1,0 +1,48 @@
+"""Static-analysis layer: machine-check the invariants the runtime promises.
+
+Two passes, both wired into ``make lint`` via ``tools/check_static.py``:
+
+* the **determinism linter** (`repro.analysis.staticcheck.linter`) — an
+  AST pass over ``src/repro/`` proving no wall-clock reads, unseeded RNG,
+  `id()`/`hash()`-fed keys, set-iteration-order leaks, or unpicklable
+  process-pool submissions reach the deterministic tier (tier map in
+  `repro.analysis.staticcheck.tiers`);
+* the **schedule race detector** (`repro.analysis.staticcheck.racecheck`)
+  — a trace validator proving resource exclusivity, dependency ordering,
+  segment-barrier monotonicity, and memory-capacity feasibility on every
+  recorded schedule, also reachable as
+  ``ScheduleEngine.schedule(..., validate=True)``.
+
+    >>> from repro.analysis.staticcheck import lint_source
+    >>> [v.rule for v in lint_source("import time\\nt = time.time()\\n",
+    ...                              tier="deterministic")]
+    ['wall-clock']
+"""
+from repro.analysis.staticcheck.linter import (
+    RULES,
+    Violation,
+    iter_python_files,
+    lint_paths,
+    lint_source,
+)
+from repro.analysis.staticcheck.racecheck import (
+    INVARIANTS,
+    TraceValidationError,
+    validate_trace,
+)
+from repro.analysis.staticcheck.tiers import (
+    DETERMINISTIC,
+    MODULE_TIERS,
+    REALTIME,
+    module_of_path,
+    rule_applies,
+    tier_of_module,
+    tier_of_path,
+)
+
+__all__ = [
+    "DETERMINISTIC", "INVARIANTS", "MODULE_TIERS", "REALTIME", "RULES",
+    "TraceValidationError", "Violation", "iter_python_files", "lint_paths",
+    "lint_source", "module_of_path", "rule_applies", "tier_of_module",
+    "tier_of_path", "validate_trace",
+]

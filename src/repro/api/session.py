@@ -1098,6 +1098,8 @@ class ExplorationSession:
         initial_allocations=(),
     ) -> StreamResult:
         """Steps 1-5 for one design point (the former `explore()` body)."""
+        # runtime_s is an operator-facing wall timing, excluded from content
+        # keys and record equality  # staticcheck: allow(wall-clock)
         t0 = time.perf_counter()
         accelerator = self._materialize(arch)
         engine = self.engine(workload, accelerator, granularity)
@@ -1147,7 +1149,7 @@ class ExplorationSession:
         final = engine.schedule(alloc, priority, strict_layers=strict)
         return StreamResult(
             schedule=final, allocation=alloc, ga=ga_res, graph=graph,
-            runtime_s=time.perf_counter() - t0, granularity=granularity,
+            runtime_s=time.perf_counter() - t0, granularity=granularity,  # staticcheck: allow(wall-clock)
         )
 
     def evaluate_allocation(
@@ -1523,6 +1525,8 @@ class ExplorationSession:
         store) and ships them with the point.  `SweepResult.n_warm_started`
         / `.warm_start_hit_rate` report how many scheduled points actually
         got seeded."""
+        # wall_s is an operator-facing wall timing, excluded from content
+        # keys and store records  # staticcheck: allow(wall-clock)
         t0 = time.perf_counter()
         state, stream = self._start_sweep(space, executor, max_workers,
                                           warm_start, order, policies,
@@ -1533,7 +1537,7 @@ class ExplorationSession:
         return SweepResult(records=records,
                            n_scheduled=state.n_computed,
                            n_from_store=state.store_hits,
-                           wall_s=time.perf_counter() - t0,
+                           wall_s=time.perf_counter() - t0,  # staticcheck: allow(wall-clock)
                            n_warm_started=state.n_warm_started,
                            n_cancelled=n_cancelled,
                            stop_reason=state.stop_reason,

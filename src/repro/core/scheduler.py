@@ -80,7 +80,8 @@ class ScheduleResult:
                  dram_intervals: list[tuple[float, float, str, int]],
                  core_busy: np.ndarray,
                  mem_events: list[tuple[float, float, int, str]] | None = None,
-                 mem_buffers: tuple[list, list, list, list] | None = None):
+                 mem_buffers: tuple[list, list, list, list] | None = None,
+                 chan_intervals: list[tuple[float, float, int, int]] | None = None):
         self.latency_cc = latency_cc
         self.energy_pj = energy_pj
         self.energy_breakdown = energy_breakdown
@@ -89,6 +90,7 @@ class ScheduleResult:
         self.core_intervals = core_intervals      # per core: (start, end, cn)
         self.comm_intervals = comm_intervals      # (s, e, u, v, bytes)
         self.dram_intervals = dram_intervals      # (s, e, kind, bytes)
+        self.chan_intervals = chan_intervals or []  # per hop: (s, e, chan, bytes)
         self.core_busy = core_busy
         self._mem_events = mem_events
         self._mem_buffers = mem_buffers
@@ -328,7 +330,8 @@ class ScheduleEngine:
     def schedule(self, allocation: Sequence[int], priority: str = "latency",
                  segment: bool = True, strict_layers: bool = False,
                  record: bool = True,
-                 checkpoint: bool | None = None) -> ScheduleResult:
+                 checkpoint: bool | None = None,
+                 validate: bool = False) -> ScheduleResult:
         """Run the event loop for one layer-core allocation.
 
         `record=False` skips the observational traces (memory events, core/
@@ -342,6 +345,12 @@ class ScheduleEngine:
         barrier keyed by the allocation prefix, and resumes this schedule
         from the deepest stored snapshot whose prefix matches — the result
         is bit-identical to a cold run.
+
+        `validate` (record=True only) runs the schedule race detector
+        (`repro.analysis.staticcheck.racecheck.validate_trace`) over the
+        recorded trace before returning — use it when debugging new
+        topologies or cost models; violations raise `TraceValidationError`
+        naming the broken invariant.
 
             >>> from repro.configs.paper_workloads import squeezenet
             >>> from repro.core import CostModel, build_graph
@@ -481,6 +490,7 @@ class ScheduleEngine:
         core_intervals: list[list[tuple[float, float, int]]] = [[] for _ in range(n_cores)]
         comm_intervals: list[tuple[float, float, int, int, int]] = []
         dram_intervals: list[tuple[float, float, str, int]] = []
+        chan_intervals: list[tuple[float, float, int, int]] = []
 
         bus_bw = acc.bus_bw_bits_per_cc
         dram_bw = acc.dram_bw_bits_per_cc
@@ -608,6 +618,9 @@ class ScheduleEngine:
                                 end = s + fresh * 8.0 / chan_bw[ch]
                                 chan_free[ch] = end
                                 e_bus += fresh * 8.0 * chan_e[ch]
+                                if record:
+                                    chan_intervals.append(
+                                        (s, end, ch, int(fresh)))
                         if record:
                             comm_intervals.append((start, end, u, i, int(fresh)))
                         if end > comm_max:
@@ -783,7 +796,7 @@ class ScheduleEngine:
         else:
             peak = act_peak = float("nan")
 
-        return ScheduleResult(
+        result = ScheduleResult(
             latency_cc=float(latency),
             energy_pj=float(total_e),
             energy_breakdown=energy,
@@ -794,7 +807,17 @@ class ScheduleEngine:
             dram_intervals=dram_intervals,
             core_busy=np.array(core_busy),
             mem_buffers=(ev_t, ev_d, ev_c, ev_k),
+            chan_intervals=chan_intervals,
         )
+        if validate:
+            if not record:
+                raise ValueError("validate=True needs record=True "
+                                 "(the detector consumes the trace)")
+            from repro.analysis.staticcheck.racecheck import validate_trace
+            validate_trace(result, self.graph, acc,
+                           workload=self.cost_model.workload,
+                           segment=segment, strict_layers=strict_layers)
+        return result
 
 
 def _peaks_from_buffers(ev_t: list[float], ev_d: list[float],
@@ -837,6 +860,8 @@ def get_engine(graph: CNGraph, cost_model: CostModel,
     cache = getattr(graph, "_engine_cache", None)
     if cache is None:
         cache = graph._engine_cache = {}
+    # in-memory cache key only, never serialized; the engine below pins the
+    # workload id for the entry's life  # staticcheck: allow(id-hash)
     key = (accelerator, cost_model.cost_fn, id(cost_model.workload))
     engine = cache.get(key)
     if engine is None:
@@ -856,11 +881,12 @@ def schedule(
     priority: str = "latency",
     segment: bool = True,             # fused-stack segmentation (see above)
     strict_layers: bool = False,      # traditional LBL: barrier after every layer
+    validate: bool = False,           # run the race detector over the trace
 ) -> ScheduleResult:
     """Seed-compatible entry point: array-native engine, cached per graph."""
     engine = get_engine(graph, cost_model, accelerator)
     return engine.schedule(allocation, priority, segment=segment,
-                           strict_layers=strict_layers)
+                           strict_layers=strict_layers, validate=validate)
 
 
 def schedule_reference(
@@ -927,6 +953,7 @@ def schedule_reference(
     core_intervals: list[list[tuple[float, float, int]]] = [[] for _ in accelerator.cores]
     comm_intervals: list[tuple[float, float, int, int, int]] = []
     dram_intervals: list[tuple[float, float, str, int]] = []
+    chan_intervals: list[tuple[float, float, int, int]] = []
 
     bus_bw = accelerator.bus_bw_bits_per_cc
     dram_bw = accelerator.dram_bw_bits_per_cc
@@ -1036,6 +1063,7 @@ def schedule_reference(
                             end_t = s + fresh * 8.0 / chan_bw[ch]
                             chan_free[ch] = end_t
                             energy["bus"] += fresh * 8.0 * chan_e[ch]
+                            chan_intervals.append((s, end_t, ch, int(fresh)))
                     comm_intervals.append((start, end_t, u, i, int(fresh)))
                     # consumer allocates at comm start; producer frees at comm end
                     alloc_act(core, fresh, start, u)
@@ -1131,4 +1159,5 @@ def schedule_reference(
         dram_intervals=dram_intervals,
         core_busy=core_busy,
         mem_events=mem_events,
+        chan_intervals=chan_intervals,
     )

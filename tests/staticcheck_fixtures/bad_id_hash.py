@@ -1,0 +1,12 @@
+"""Fixture: id()/hash() feeding keys — interpreter-run-local values that
+must never reach anything content-keyed or persisted."""
+
+
+def content_key(obj) -> str:
+    return str(hash(obj))                # line 6: hash() inside a *key* fn
+
+
+def build(cfg):
+    cache_key = (id(cfg), "v1")          # line 10: id() into a *key* target
+    plain = id(cfg)                      # not keyish: fine
+    return cache_key, plain

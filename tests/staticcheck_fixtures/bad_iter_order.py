@@ -1,0 +1,15 @@
+"""Fixture: set iteration order escaping — and the sorted() uses that
+make it deterministic."""
+
+
+def leak(items):
+    seen = {x.name for x in items}
+    for name in seen:                    # dict/list iteration is fine; but:
+        pass
+    for name in {"b", "a"}:              # line 9: set literal iterated
+        print(name)
+    out = list({x for x in items})       # line 11: set comp materialized
+    csv = ",".join(set(items))           # line 12: set serialized
+    ok = sorted({x for x in items})      # sorted: fine
+    n = len({x for x in items})          # order-insensitive: fine
+    return out, csv, ok, n

@@ -1,0 +1,10 @@
+"""Fixture: malformed pragmas — suppressions must name a known rule."""
+import time
+
+
+def a():
+    return time.time()  # staticcheck: allow(not-a-rule)
+
+
+def b():
+    return time.time()  # staticcheck: ignore

@@ -1,0 +1,17 @@
+"""Fixture: unpicklable callables crossing the process-pool boundary."""
+
+
+def top_level(x):
+    return x + 1
+
+
+def launch(pool, xs):
+    f1 = pool.submit(lambda x: x + 1, xs[0])      # line 9: lambda submitted
+    def helper(x):
+        return x * 2
+    f2 = pool.submit(helper, xs[1])               # line 12: nested def
+    g = lambda x: x - 1
+    f3 = pool.apply_async(g, (xs[2],))            # line 14: lambda-named
+    f4 = pool.submit(top_level, xs[3])            # module-level: fine
+    mapped = map(lambda x: x, xs)                 # plain map(): fine
+    return f1, f2, f3, f4, mapped

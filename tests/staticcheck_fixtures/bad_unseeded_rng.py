@@ -1,0 +1,19 @@
+"""Fixture: global/unseeded RNG the linter must catch — and the seeded
+constructions it must leave alone."""
+import os
+import random
+
+import numpy as np
+
+
+def draw(seed: int):
+    a = random.random()                  # line 10: process-global RNG
+    random.seed(seed)                    # line 11: mutates global state
+    b = np.random.rand(3)                # line 12: numpy legacy global
+    rng = np.random.default_rng()        # line 13: unseeded constructor
+    tok = os.urandom(8)                  # line 14: OS entropy
+    good = np.random.default_rng(seed)   # seeded: fine
+    also = random.Random(seed)           # seeded: fine
+    import jax
+    key = jax.random.PRNGKey(seed)       # key-passing API: fine
+    return a, b, rng, tok, good, also, key

@@ -1,0 +1,13 @@
+"""Fixture: every flavour of wall-clock read the linter must catch."""
+import time
+from datetime import datetime
+from time import perf_counter as pc
+
+
+def stamp():
+    t0 = time.time()                     # line 8: wall-clock
+    t1 = time.perf_counter()             # line 9: wall-clock
+    now = datetime.now()                 # line 10: wall-clock
+    t2 = pc()                            # line 11: wall-clock (aliased)
+    time.sleep(0.0)                      # sleeping is not *reading* the clock
+    return t0, t1, now, t2

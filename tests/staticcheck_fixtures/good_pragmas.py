@@ -1,0 +1,13 @@
+"""Fixture: intentional nondeterminism, every site pragma-suppressed —
+lints with zero *unallowed* violations on the deterministic tier."""
+import time
+
+
+def heartbeat() -> dict:
+    return {"updated_unix": time.time()}  # staticcheck: allow(wall-clock)
+
+
+def wall_budget() -> float:
+    # operator-facing timing, never persisted
+    # staticcheck: allow(wall-clock)
+    return time.perf_counter()

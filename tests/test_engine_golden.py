@@ -47,6 +47,7 @@ def _assert_identical(a, b):
     assert a.mem_events == b.mem_events
     assert a.comm_intervals == b.comm_intervals
     assert a.dram_intervals == b.dram_intervals
+    assert a.chan_intervals == b.chan_intervals
     assert [sorted(iv) for iv in a.core_intervals] == \
         [sorted(iv) for iv in b.core_intervals]
     assert np.array_equal(a.core_busy, b.core_busy)
@@ -62,6 +63,23 @@ def test_engine_matches_reference(setup, priority, mode):
     fast = engine.schedule(alloc, priority, **kw)
     ref = schedule_reference(graph, cm, alloc, acc, priority, **kw)
     _assert_identical(fast, ref)
+
+
+@pytest.mark.parametrize("priority", ["latency", "memory"])
+@pytest.mark.parametrize("mode", ["segmented", "unsegmented", "strict_layers"])
+def test_traces_validate_clean(setup, priority, mode):
+    """The race detector passes on both implementations' golden traces —
+    it checks the invariants bit-identity can't (shared bugs)."""
+    from repro.analysis.staticcheck import validate_trace
+    w, acc, graph, cm, engine = setup
+    kw = {"segmented": {}, "unsegmented": {"segment": False},
+          "strict_layers": {"strict_layers": True}}[mode]
+    alloc = manual_pingpong(w, acc)
+    engine.schedule(alloc, priority, validate=True, **kw)  # raises on races
+    ref = schedule_reference(graph, cm, alloc, acc, priority, **kw)
+    report = validate_trace(ref, graph, acc, workload=w, **kw)
+    assert report["cns"] == graph.n
+    assert not report["skipped"]
 
 
 def test_engine_matches_reference_on_random_allocations(setup):

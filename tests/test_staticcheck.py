@@ -1,0 +1,279 @@
+"""Static-analysis layer: the determinism linter against its fixture
+corpus (exact rule IDs and line numbers), the module-tier map, the pragma
+machinery, the repo-lints-clean gate, and the schedule race detector —
+clean on real traces, and failing with the *named* invariant when a trace
+is deliberately corrupted."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.staticcheck import (DETERMINISTIC, REALTIME, RULES,
+                                        TraceValidationError, lint_paths,
+                                        lint_source, rule_applies,
+                                        tier_of_module, tier_of_path,
+                                        validate_trace)
+from repro.configs.paper_workloads import fsrcnn
+from repro.core import CostModel, build_graph
+from repro.core.allocator import manual_pingpong
+from repro.core.scheduler import ScheduleEngine
+from repro.hw.catalog import mc_hom_tpu
+
+pytestmark = pytest.mark.tier1
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "staticcheck_fixtures"
+
+
+def _findings(name: str):
+    """(rule, line) pairs of unallowed findings in one fixture file."""
+    vs = lint_paths([str(FIXTURES / name)], tier=DETERMINISTIC)
+    return [(v.rule, v.line) for v in vs if not v.allowed]
+
+
+# ---------------------------------------------------------------------------
+# linter: fixture corpus, exact rules + lines
+# ---------------------------------------------------------------------------
+
+def test_wall_clock_fixture():
+    assert _findings("bad_wall_clock.py") == [
+        ("wall-clock", 8), ("wall-clock", 9),
+        ("wall-clock", 10), ("wall-clock", 11)]
+
+
+def test_unseeded_rng_fixture():
+    assert _findings("bad_unseeded_rng.py") == [
+        ("unseeded-rng", 10), ("unseeded-rng", 11), ("unseeded-rng", 12),
+        ("unseeded-rng", 13), ("unseeded-rng", 14)]
+
+
+def test_id_hash_fixture():
+    assert _findings("bad_id_hash.py") == [("id-hash", 6), ("id-hash", 10)]
+
+
+def test_iter_order_fixture():
+    assert _findings("bad_iter_order.py") == [
+        ("iter-order", 9), ("iter-order", 11), ("iter-order", 12)]
+
+
+def test_submit_fixture():
+    assert _findings("bad_submit_lambda.py") == [
+        ("unpicklable-submit", 9), ("unpicklable-submit", 12),
+        ("unpicklable-submit", 14)]
+
+
+def test_good_pragmas_fixture():
+    """Every intentional site is suppressed — but stays visible as allowed."""
+    assert _findings("good_pragmas.py") == []
+    vs = lint_paths([str(FIXTURES / "good_pragmas.py")], tier=DETERMINISTIC)
+    assert [(v.rule, v.line, v.allowed) for v in vs] == [
+        ("wall-clock", 7, True), ("wall-clock", 13, True)]
+
+
+def test_bad_pragma_fixture():
+    """A malformed pragma is itself a violation and suppresses nothing."""
+    assert _findings("bad_pragma.py") == [
+        ("bad-pragma", 6), ("wall-clock", 6),
+        ("bad-pragma", 10), ("wall-clock", 10)]
+
+
+def test_pragma_in_docstring_is_not_a_pragma():
+    src = '"""uses # staticcheck: allow(wall-clock) in prose"""\n' \
+          "import time\nt = time.time()\n"
+    vs = lint_source(src, tier=DETERMINISTIC)
+    assert [(v.rule, v.allowed) for v in vs] == [("wall-clock", False)]
+
+
+def test_parse_error_is_reported():
+    assert [v.rule for v in lint_source("def broken(:\n")] == ["parse-error"]
+
+
+# ---------------------------------------------------------------------------
+# tier map
+# ---------------------------------------------------------------------------
+
+def test_tier_map():
+    assert tier_of_module("repro.core.scheduler") == DETERMINISTIC
+    assert tier_of_module("repro.api.session") == DETERMINISTIC
+    assert tier_of_module("repro.launch.serve") == REALTIME
+    assert tier_of_path("src/repro/hw/topology.py") == DETERMINISTIC
+    assert tier_of_path("benchmarks/run.py") == REALTIME
+    # wall-clock is tier-scoped; RNG hygiene applies everywhere
+    assert not rule_applies("wall-clock", REALTIME)
+    assert rule_applies("unseeded-rng", REALTIME)
+    src = "import time\nt = time.time()\nimport random\nr = random.random()\n"
+    assert [v.rule for v in lint_source(src, tier=REALTIME)] \
+        == ["unseeded-rng"]
+
+
+def test_repo_lints_clean():
+    """The merge gate: src/repro has zero unallowed violations, and every
+    suppression names a known rule."""
+    vs = lint_paths([str(ROOT / "src" / "repro")])
+    assert [v.format() for v in vs if not v.allowed] == []
+    assert all(v.rule in RULES for v in vs)
+    assert any(v.allowed for v in vs)  # the audited wall-clock/id-hash sites
+
+
+# ---------------------------------------------------------------------------
+# CLI (`make lint`)
+# ---------------------------------------------------------------------------
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_static.py"), *args],
+        capture_output=True, text=True, cwd=ROOT)
+
+
+def test_cli_strict_clean_repo_exits_zero():
+    proc = _cli("--strict")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 violations" in proc.stdout
+
+
+def test_cli_strict_exits_5_on_violations():
+    # RNG hygiene applies on every tier, so the fixture trips the CLI too
+    proc = _cli("--strict", str(FIXTURES / "bad_unseeded_rng.py"))
+    assert proc.returncode == 5
+    assert "unseeded-rng" in proc.stdout
+
+
+def test_cli_json_format():
+    proc = _cli("--format", "json", str(FIXTURES / "bad_unseeded_rng.py"))
+    report = json.loads(proc.stdout)
+    assert report["summary"]["unallowed"] == 5
+    assert {v["rule"] for v in report["violations"]} == {"unseeded-rng"}
+    assert all(v["line"] for v in report["violations"])
+
+
+# ---------------------------------------------------------------------------
+# race detector: clean traces, then one corruption per invariant
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sched():
+    w, acc = fsrcnn(), mc_hom_tpu()
+    graph = build_graph(w, acc, ("tile", 8, 1))
+    engine = ScheduleEngine(graph, CostModel(w, acc), acc)
+    alloc = manual_pingpong(w, acc)
+    return w, acc, graph, engine, alloc
+
+
+def test_validate_param_smoke(sched):
+    w, acc, graph, engine, alloc = sched
+    res = engine.schedule(alloc, "latency", validate=True)
+    assert res.latency_cc > 0
+    with pytest.raises(ValueError, match="record=True"):
+        engine.schedule(alloc, "latency", record=False, validate=True)
+
+
+def test_unrecorded_trace_is_rejected(sched):
+    w, acc, graph, engine, alloc = sched
+    lite = engine.schedule(alloc, "latency", record=False)
+    with pytest.raises(ValueError, match="record=True"):
+        validate_trace(lite, graph, acc, workload=w)
+
+
+def test_corrupt_core_overlap_named(sched):
+    """Overlapping core occupancy fails as core-exclusivity, by name."""
+    w, acc, graph, engine, alloc = sched
+    res = engine.schedule(alloc, "latency", segment=False)
+    core, ivs = next((c, iv) for c, iv in enumerate(res.core_intervals)
+                     if len(iv) >= 2)
+    (s0, e0, i0), (s1, e1, i1) = ivs[0], ivs[1]
+    ivs[1] = ((s0 + e0) / 2, e1, i1)       # starts inside CN i0's window
+    with pytest.raises(TraceValidationError, match=r"\[core-exclusivity\]") \
+            as exc:
+        validate_trace(res, graph, acc, workload=w, segment=False)
+    assert exc.value.invariant == "core-exclusivity"
+    assert f"core {core}" in str(exc.value)
+
+
+def test_corrupt_reordered_dependency_named(sched):
+    """A transfer landing after its consumer started fails as
+    dependency-order, by name."""
+    w, acc, graph, engine, alloc = sched
+    res = engine.schedule(alloc, "latency", segment=False)
+    assert res.comm_intervals          # pingpong on a bus arch must transfer
+    start = {}
+    for ivs in res.core_intervals:
+        for s, e, i in ivs:
+            start[i] = s
+    k, (s, e, u, v, b) = next(
+        (k, iv) for k, iv in enumerate(res.comm_intervals))
+    late = start[v] + 0.01 * res.latency_cc   # lands well past the start
+    res.comm_intervals[k] = (s, late, u, v, b)
+    with pytest.raises(TraceValidationError) as exc:
+        validate_trace(res, graph, acc, workload=w, segment=False)
+    assert exc.value.invariant == "dependency-order"
+    assert f"CN {v}" in str(exc.value)
+
+
+def test_corrupt_memory_overflow_named(sched):
+    """An allocation past SRAM capacity fails as memory-capacity, by name."""
+    w, acc, graph, engine, alloc = sched
+    res = engine.schedule(alloc, "latency")
+    res.mem_events.append((res.latency_cc, 1e18, 0, "act"))
+    with pytest.raises(TraceValidationError) as exc:
+        validate_trace(res, graph, acc, workload=w)
+    assert exc.value.invariant == "memory-capacity"
+    assert "core 0" in str(exc.value)
+
+
+def test_corrupt_segment_barrier_named(sched):
+    """A CN starting before the previous fused stack drains fails as
+    segment-monotonicity, by name — the invariant checkpointing needs."""
+    w, acc, graph, engine, alloc = sched
+    res = engine.schedule(alloc, "latency", strict_layers=True)
+    layer_of = graph.layer.tolist()
+    corrupted = False
+    for core, ivs in enumerate(res.core_intervals):
+        for k in range(1, len(ivs)):
+            s, e, i = ivs[k]
+            prev_end = ivs[k - 1][1]
+            barrier = max((ee for civ in res.core_intervals
+                           for ss, ee, jj in civ
+                           if layer_of[jj] < layer_of[i]), default=0.0)
+            # a start inside (prev core busy end, stack barrier) keeps
+            # core-exclusivity intact but breaks the barrier
+            if prev_end < barrier - 1e-3 * res.latency_cc:
+                ivs[k] = ((prev_end + barrier) / 2, e, i)
+                corrupted = True
+                break
+        if corrupted:
+            break
+    assert corrupted, "no corruptible window found"
+    with pytest.raises(TraceValidationError) as exc:
+        validate_trace(res, graph, acc, workload=w, strict_layers=True)
+    assert exc.value.invariant == "segment-monotonicity"
+    assert "barrier" in str(exc.value)
+
+
+def test_corrupt_bus_double_booking_named(sched):
+    """Two transfers occupying the shared bus at once fail as
+    channel-exclusivity, by name.  A duplicated transfer keeps producer/
+    consumer ordering intact (same endpoints), so only the bus resource
+    is double-booked."""
+    w, acc, graph, engine, alloc = sched
+    res = engine.schedule(alloc, "latency", segment=False)
+    assert res.comm_intervals
+    res.comm_intervals.append(res.comm_intervals[0])
+    with pytest.raises(TraceValidationError) as exc:
+        validate_trace(res, graph, acc, workload=w, segment=False)
+    assert exc.value.invariant == "channel-exclusivity"
+    assert "shared bus" in str(exc.value)
+
+
+def test_report_contents(sched):
+    w, acc, graph, engine, alloc = sched
+    res = engine.schedule(alloc, "latency")
+    report = validate_trace(res, graph, acc, workload=w)
+    assert report["cns"] == graph.n
+    assert report["edges"] > 0
+    assert report["channels"] == 1         # flat bus
+    assert report["skipped"] == []
+    # without the workload the segment partition cannot be re-derived
+    report2 = validate_trace(res, graph, acc)
+    assert report2["skipped"] == ["segment-monotonicity (needs workload)"]

@@ -183,7 +183,7 @@ def _engine(w, graph, acc):
     return ScheduleEngine(graph, CostModel(w, acc), acc)
 
 
-def _assert_identical(a, b):
+def _assert_identical(a, b, chan=True):
     assert a.latency_cc == b.latency_cc
     assert a.energy_pj == b.energy_pj
     assert a.energy_breakdown == b.energy_breakdown
@@ -192,6 +192,8 @@ def _assert_identical(a, b):
     assert a.mem_events == b.mem_events
     assert a.comm_intervals == b.comm_intervals
     assert a.dram_intervals == b.dram_intervals
+    if chan:
+        assert a.chan_intervals == b.chan_intervals
     assert np.array_equal(a.core_busy, b.core_busy)
 
 
@@ -205,9 +207,13 @@ def test_single_cluster_degenerates_to_flat(sqz_setup, priority):
     e1 = _engine(w, graph, chip1)
     assert e1._routes is not None           # channel path exercised
     for mode in ({}, {"segment": False}, {"strict_layers": True}):
-        _assert_identical(
-            _engine(w, graph, flat).schedule(alloc, priority, **mode),
-            e1.schedule(alloc, priority, **mode))
+        r_flat = _engine(w, graph, flat).schedule(alloc, priority, **mode)
+        r_chip = e1.schedule(alloc, priority, **mode)
+        # the flat arch has no channels; chip1's one local bus must carry
+        # exactly the flat bus's transfer envelopes on channel 0
+        _assert_identical(r_flat, r_chip, chan=False)
+        assert r_chip.chan_intervals == \
+            [(s, e, 0, b) for s, e, _u, _v, b in r_flat.comm_intervals]
 
 
 def test_single_cluster_explore_matches_flat():
@@ -233,6 +239,25 @@ def test_engine_matches_reference_on_chiplets(sqz_setup, priority):
         got = _engine(w, graph, acc).schedule(a, priority)
         ref = schedule_reference(graph, CostModel(w, acc), a, acc, priority)
         _assert_identical(got, ref)
+
+
+@pytest.mark.parametrize("priority", ["latency", "memory"])
+@pytest.mark.parametrize("chiplets", [1, 2, 4])
+def test_topology_traces_validate_clean(sqz_setup, priority, chiplets):
+    """The race detector passes on engine and reference traces for every
+    chiplet count: per-channel FCFS never double-books a link, and the
+    multi-hop envelopes respect dependency order."""
+    from repro.analysis.staticcheck import validate_trace
+    w, flat, graph, alloc = sqz_setup
+    acc = with_chiplets(flat, chiplets)
+    engine = _engine(w, graph, acc)
+    got = engine.schedule(alloc, priority, validate=True)  # raises on races
+    ref = schedule_reference(graph, CostModel(w, acc), alloc, acc, priority)
+    report = validate_trace(ref, graph, acc, workload=w)
+    assert report["cns"] == graph.n
+    if chiplets > 1:
+        # chiplets -> per-cluster buses + ring links, all hops recorded
+        assert report["channels"] > 1 and got.chan_intervals
 
 
 def test_checkpoint_resume_on_chiplets(sqz_setup):

@@ -5,8 +5,10 @@
    (external http(s)/mailto links and pure #anchors are skipped — no
    network access here).
 2. Runs the executable docstring examples of the public API surface
-   (`repro.api.*`, the topology model, the scheduler, the GA) through
-   `doctest`.
+   through `doctest`.  The `repro.api` and `repro.analysis` packages are
+   walked automatically (every public module — no underscore-prefixed name
+   part — is included), so a new module cannot silently skip the gate;
+   `EXTRA_MODULES` pins the public surface outside those packages.
 
 Exits non-zero on any broken link or failed example.
 """
@@ -15,6 +17,7 @@ from __future__ import annotations
 import doctest
 import importlib
 import os
+import pkgutil
 import re
 import sys
 
@@ -23,20 +26,32 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 MARKDOWN = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md",
             "ISSUE.md", "SNIPPETS.md"]
 
-DOCTEST_MODULES = [
-    "repro.api",
-    "repro.api.archspec",
-    "repro.api.designspace",
-    "repro.api.distributed",
-    "repro.api.policies",
-    "repro.api.resilience",
-    "repro.api.session",
+# packages whose public modules are discovered recursively
+DISCOVER_PACKAGES = ["repro.api", "repro.analysis"]
+# public modules outside the discovered packages
+EXTRA_MODULES = [
     "repro.hw.topology",
     "repro.hw.catalog",
     "repro.core.ga",
     "repro.core.scheduler",
     "repro.core.stream_api",
 ]
+
+
+def doctest_modules() -> list[str]:
+    """Discovered public modules + the pinned extras, sorted and deduped.
+
+    Discovery imports each package and walks its `__path__`; a module is
+    public when no dotted-name part starts with an underscore."""
+    names = set(EXTRA_MODULES)
+    for pkg_name in DISCOVER_PACKAGES:
+        pkg = importlib.import_module(pkg_name)
+        names.add(pkg_name)
+        for info in pkgutil.walk_packages(pkg.__path__, f"{pkg_name}."):
+            if any(part.startswith("_") for part in info.name.split(".")):
+                continue
+            names.add(info.name)
+    return sorted(names)
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
@@ -73,9 +88,9 @@ def check_links() -> list[str]:
     return problems
 
 
-def run_doctests() -> tuple[int, int, list[str]]:
+def run_doctests(modules: list[str]) -> tuple[int, int, list[str]]:
     attempted, failed, failures = 0, 0, []
-    for name in DOCTEST_MODULES:
+    for name in modules:
         mod = importlib.import_module(name)
         res = doctest.testmod(mod, verbose=False)
         attempted += res.attempted
@@ -96,8 +111,9 @@ def main() -> int:
             print(f"  {p}")
     else:
         print(", all relative links resolve")
-    attempted, failed, failures = run_doctests()
-    print(f"doctests: {attempted} examples over {len(DOCTEST_MODULES)} "
+    modules = doctest_modules()
+    attempted, failed, failures = run_doctests(modules)
+    print(f"doctests: {attempted} examples over {len(modules)} "
           f"modules, {failed} failed")
     for f in failures:
         print(f"  {f}")

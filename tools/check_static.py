@@ -1,0 +1,71 @@
+"""Static-analysis gate (`make lint`): the determinism linter over the repo.
+
+Runs `repro.analysis.staticcheck.lint_paths` over `src/repro/` (or the
+paths given on the command line) and reports every finding — including
+pragma-suppressed ones, marked `[allowed]` so intentional nondeterminism
+stays visible in CI logs.
+
+Exit codes: 0 clean (or non-strict), 5 unallowed violations under
+`--strict`, 2 usage error.  `--format json` emits one machine-readable
+object (`{"violations": [...], "summary": {...}}`) for tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXIT_VIOLATIONS = 5
+
+
+def main(argv: list[str] | None = None) -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.analysis.staticcheck import lint_paths, tier_of_path
+
+    parser = argparse.ArgumentParser(
+        prog="check_static",
+        description="determinism linter over the repo's Python sources")
+    parser.add_argument("paths", nargs="*",
+                        default=[os.path.join(ROOT, "src", "repro")],
+                        help="files/directories to lint "
+                             "(default: src/repro)")
+    parser.add_argument("--strict", action="store_true",
+                        help=f"exit {EXIT_VIOLATIONS} when unallowed "
+                             "violations remain")
+    parser.add_argument("--format", choices=("text", "json"), default="text",
+                        help="report format (default: text)")
+    args = parser.parse_args(argv)
+
+    violations = lint_paths(args.paths)
+    unallowed = [v for v in violations if not v.allowed]
+    allowed = [v for v in violations if v.allowed]
+
+    if args.format == "json":
+        print(json.dumps({
+            "violations": [{
+                "path": os.path.relpath(v.path, ROOT)
+                if os.path.isabs(v.path) else v.path,
+                "line": v.line, "col": v.col, "rule": v.rule,
+                "message": v.message, "allowed": v.allowed,
+                "tier": tier_of_path(v.path),
+            } for v in violations],
+            "summary": {"unallowed": len(unallowed),
+                        "allowed": len(allowed),
+                        "strict": bool(args.strict)},
+        }, indent=2))
+    else:
+        for v in violations:
+            print(v.format())
+        print(f"staticcheck: {len(unallowed)} violations, "
+              f"{len(allowed)} pragma-allowed")
+
+    if unallowed and args.strict:
+        return EXIT_VIOLATIONS
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
