@@ -101,6 +101,65 @@ def run(report=print, full: bool = False, seed: int = 0,
     het = results[("MC:Hetero", "geomean")]["gain"]
     report(f"geomean EDP gain: single-core {min(sc):.1f}-{max(sc):.1f}x | "
            f"homogeneous quad {min(mc):.1f}-{max(mc):.1f}x | heterogeneous {het:.1f}x")
+
+    # ---- vectorized prefilter leg ----------------------------------------
+    # Re-explore a fixed committed subset of cells with the batched
+    # approximate prefilter on vs off and assert the selected designs are
+    # bit-identical (always the quick GA budget: these seed/budget combos are
+    # the ones whose prefiltered trajectory is verified unchanged — longer
+    # budgets may legitimately diverge while staying exactly scored).
+    from repro.core.allocator import feasible_cores_per_layer
+    from repro.core.vectorized import get_batched_fitness
+
+    pf_pop, pf_gens = 16, 8
+    pf_seeds = (0, 1)  # pinned: the committed identity-verified seeds
+    pf_sess = ExplorationSession()
+    pf_w = EXPLORATION_WORKLOADS["squeezenet"]()
+    pf_acc = EXPLORATION_ARCHITECTURES["MC:Hetero"]()
+    pf_eng = pf_sess.engine(pf_w, pf_acc, FINE_GRANULARITY)
+    # pay the one-off jit traces (the 8/16-wide padded chunk shapes the
+    # offspring batches land on) outside the timed legs
+    bf = get_batched_fitness(pf_eng, priority="latency")
+    g0 = np.stack([[f[0] for f in feasible_cores_per_layer(pf_w, pf_acc)]
+                   for _ in range(16)])
+    bf.scores(g0)
+    bf.scores(g0[:8])
+    legs = {}
+    for pf in (False, True):
+        recs = []
+        t0 = time.perf_counter()
+        for s in pf_seeds:
+            pf_eng.reset_checkpoints()
+            recs.append(pf_sess.explore(
+                pf_w, pf_acc, granularity=FINE_GRANULARITY, objective="edp",
+                priority="latency", pop_size=pf_pop, generations=pf_gens,
+                seed=s, prefilter=pf))
+        legs[pf] = (recs, time.perf_counter() - t0)
+    (recs0, wall0), (recs1, wall1) = legs[False], legs[True]
+    setups = pf_seeds
+    screened = pruned = evals0 = evals1 = 0
+    for s, r0, r1 in zip(pf_seeds, recs0, recs1):
+        assert (r0.latency_cc == r1.latency_cc
+                and r0.energy_pj == r1.energy_pj
+                and r0.peak_mem_bytes == r1.peak_mem_bytes
+                and np.array_equal(r0.allocation, r1.allocation)), \
+            f"prefiltered exploration diverged on squeezenet/MC:Hetero/s{s}"
+        screened += r1.ga.prefilter_screened
+        pruned += r1.ga.prefilter_pruned
+        evals0 += r0.ga.evaluations
+        evals1 += r1.ga.evaluations
+    results[("sweep", "prefilter")] = dict(
+        cells=len(setups), points_per_sec_off=len(setups) / max(wall0, 1e-9),
+        points_per_sec_on=len(setups) / max(wall1, 1e-9),
+        prefilter_screened=screened, prefilter_pruned=pruned,
+        prefilter_hit_rate=pruned / max(screened, 1),
+        exact_evals_off=evals0, exact_evals_on=evals1)
+    report(f"prefilter leg ({len(setups)} cells): identical designs, "
+           f"{pruned}/{screened} offspring pruned "
+           f"({pruned / max(screened, 1):.0%}), exact evals "
+           f"{evals0}->{evals1}, "
+           f"{len(setups) / max(wall0, 1e-9):.2f} -> "
+           f"{len(setups) / max(wall1, 1e-9):.2f} points/s")
     return results
 
 

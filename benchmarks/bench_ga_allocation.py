@@ -14,7 +14,8 @@ import numpy as np
 from repro.configs.paper_workloads import resnet18
 from repro.api import default_session
 from repro.core import CostModel, evaluate_allocation, explore
-from repro.core.allocator import manual_best_fit, manual_pingpong
+from repro.core.allocator import (feasible_cores_per_layer, manual_best_fit,
+                                  manual_pingpong)
 from repro.core.scheduler import ScheduleEngine
 from repro.hw.catalog import mc_hetero, mc_hom_tpu
 
@@ -80,6 +81,61 @@ def run(report=print, full: bool = False, seed: int = 0) -> dict:
            f"fitness-cache hit rate {out['stats']['fitness_cache_hit_rate']:.0%}, "
            f"checkpoint resume rate {out['stats']['checkpoint_resume_rate']:.0%} "
            f"({out['stats']['checkpoint_cns_skipped_frac']:.0%} of CNs skipped)")
+
+    # ---- vectorized prefilter leg ----------------------------------------
+    # Same Fig.-12 searches with the batched approximate prefilter screening
+    # each generation's offspring (committed quick budget: identity of the
+    # search result is asserted, so the reported metric values are the
+    # unfiltered ones bit-for-bit; longer budgets may legitimately follow a
+    # different — equally exact-scored — trajectory).
+    from repro.core.vectorized import get_batched_fitness
+
+    qpop, qgens = 12, 8
+    pf_out = {}
+    for arch_name, arch_fn in (("MC:HomTPU", mc_hom_tpu), ("MC:Hetero", mc_hetero)):
+        acc = arch_fn()
+        w = resnet18()
+        engine = default_session().engine(w, acc, GRANULARITY)
+        for prio in ("latency", "memory"):
+            # pay the one-off jit traces outside the timed region: `scores`
+            # pads to power-of-two chunks, and pop-12 offspring batches with
+            # the min-batch gate land on the 8- and 16-wide shapes
+            bf = get_batched_fitness(engine, priority=prio)
+            warm = np.stack([[f[0] for f in feasible_cores_per_layer(w, acc)]
+                             for _ in range(16)])
+            bf.scores(warm)
+            bf.scores(warm[:8])
+            runs = {}
+            for pf in (False, True):
+                engine.reset_checkpoints()
+                t0 = time.perf_counter()
+                runs[pf] = explore(w, acc, granularity=GRANULARITY,
+                                   objective="edp", priority=prio,
+                                   pop_size=qpop, generations=qgens,
+                                   seed=seed, prefilter=pf)
+                runs[pf] = (runs[pf], time.perf_counter() - t0)
+            (r0, w0), (r1, w1) = runs[False], runs[True]
+            assert (r0.schedule.latency_cc == r1.schedule.latency_cc
+                    and r0.schedule.energy_pj == r1.schedule.energy_pj
+                    and r0.schedule.peak_mem_bytes == r1.schedule.peak_mem_bytes), \
+                f"prefiltered GA diverged on {arch_name}/{prio}"
+            pf_out[f"{arch_name}/{prio}"] = {
+                "latency": r1.schedule.latency_cc,
+                "energy": r1.schedule.energy_pj,
+                "points_per_sec_off": 1.0 / w0,
+                "points_per_sec_on": 1.0 / w1,
+                "exact_evals_off": r0.ga.evaluations,
+                "exact_evals_on": r1.ga.evaluations,
+                "prefilter_screened": r1.ga.prefilter_screened,
+                "prefilter_pruned": r1.ga.prefilter_pruned,
+                "prefilter_hit_rate": r1.ga.prefilter_prune_rate,
+            }
+            report(f"prefilter {arch_name:10s} {prio:8s}: identical metrics, "
+                   f"{r1.ga.prefilter_pruned}/{r1.ga.prefilter_screened} "
+                   f"offspring pruned, exact evals "
+                   f"{r0.ga.evaluations}->{r1.ga.evaluations}, "
+                   f"{1.0 / w0:.2f} -> {1.0 / w1:.2f} points/s")
+    out["prefilter"] = pf_out
     return out
 
 

@@ -12,9 +12,16 @@ setup (ResNet-18, 32-band CNs, homogeneous quad-core) in three modes:
   * cold — the same stream with checkpointing disabled (every schedule
     replays the whole event loop), plus the full-trace record mode.
   * reference — the seed object/dict implementation (`schedule_reference`).
+  * vectorized — the batched approximate evaluator
+    (`repro.core.vectorized.BatchedFitness`): batched genomes/s on a
+    population matrix and on the offspring stream, per-genome
+    `evaluate_population` on the same matrix for the speedup, approximate
+    vs exact rank correlation, and the GA prefilter's prune/rescore stats.
 
 Every incremental result is asserted identical to the cold engine and the
-reference oracle before any timing runs.
+reference oracle before any timing runs; the vectorized leg asserts its
+exact-rescore oracle is bit-identical to the engine and that the committed
+prefiltered GA run reproduces the unfiltered search result.
 """
 from __future__ import annotations
 
@@ -108,6 +115,68 @@ def run(report=print, full: bool = False) -> dict:
     ref = _rate(lambda: schedule_reference(graph, CostModel(w, acc), alloc, acc),
                 min_s=1.0 if full else 0.5)
 
+    # ---- vectorized batched-fitness leg (repro.core.vectorized) ----------
+    # The batched evaluator approximates contention, so it is a ranking
+    # prefilter, never a metric source: assert its exact-rescore oracle is
+    # bit-identical to the engine before timing anything, then compare
+    # batched throughput against per-genome `evaluate_population` on the
+    # very same genome matrix (a fresh generation-0 population — offspring
+    # streams additionally enjoy checkpoint prefix reuse, reported above).
+    from repro.core.ga import GeneticAllocator
+    from repro.core.vectorized import get_batched_fitness, rank_correlation
+
+    bf = get_batched_fitness(engine)
+    p_batch = 512 if full else 256
+    rng = np.random.default_rng(1)
+    pop = np.stack([np.array([f[rng.integers(len(f))] for f in feas])
+                    for _ in range(p_batch)])
+    sample = pop[:48]
+    exact_sample = engine.evaluate_population(sample, "latency")
+    assert np.array_equal(bf.rescore(sample), exact_sample), \
+        "prefilter rescore oracle diverged from the exact engine"
+    approx_sample = bf.scores(sample)
+    corr = {
+        "latency": rank_correlation(approx_sample[:, 0], exact_sample[:, 0]),
+        "energy": rank_correlation(approx_sample[:, 1], exact_sample[:, 1]),
+        "edp": rank_correlation(approx_sample[:, 0] * approx_sample[:, 1],
+                                exact_sample[:, 0] * exact_sample[:, 1]),
+    }
+
+    bf.scores(pop)  # jit warm-up
+    passes, t0 = 0, time.perf_counter()
+    while True:
+        bf.scores(pop)
+        passes += 1
+        dt = time.perf_counter() - t0
+        if dt >= (3.0 if full else 1.5) and passes >= 2:
+            break
+    batched = passes * p_batch / dt
+    off_mat = np.stack(stream[:p_batch])
+    t0 = time.perf_counter()
+    bf.scores(off_mat)
+    batched_off = p_batch / (time.perf_counter() - t0)
+    engine.reset_checkpoints()
+    t0 = time.perf_counter()
+    engine.evaluate_population(pop, "latency")
+    exact_pop = p_batch / (time.perf_counter() - t0)
+
+    # prefilter effect on a GA run: identical search outcome (asserted for
+    # this committed seed/budget), fewer exact evaluations
+    def _ga(pf):
+        engine.reset_checkpoints()
+        return GeneticAllocator(
+            n_genes=len(feas), feasible_cores=feas,
+            evaluate_population=lambda M: engine.evaluate_population(
+                M, "latency"),
+            pop_size=12, generations=8, seed=0,
+            prefilter=bf.prefilter("edp") if pf else None,
+        ).run()
+
+    ga_off, ga_on = _ga(False), _ga(True)
+    assert np.array_equal(ga_off.best_objs, ga_on.best_objs) and \
+        np.array_equal(ga_off.best_genome, ga_on.best_genome), \
+        "prefiltered GA diverged from the exact run on the committed seed"
+
     report(f"== scheduler throughput (resnet18, tile32, {acc.name}, "
            f"{len(graph.cns)} CNs, {len(stream)} offspring) ==")
     report(f"engine incremental   : {eng_inc:8.1f} schedules/s "
@@ -118,6 +187,17 @@ def run(report=print, full: bool = False) -> dict:
     report(f"reference (seed impl): {ref:8.1f} schedules/s")
     report(f"speedup: {eng_inc / ref:.1f}x vs reference, "
            f"{eng_inc / eng_cold:.1f}x vs cold engine")
+    report(f"vectorized batched   : {batched:8.1f} genomes/s "
+           f"(population), {batched_off:8.1f} genomes/s (offspring), "
+           f"{exact_pop:.1f} exact genomes/s same matrix -> "
+           f"{batched / exact_pop:.1f}x")
+    report(f"vectorized rank corr : lat {corr['latency']:.3f}  "
+           f"en {corr['energy']:.3f}  edp {corr['edp']:.3f}")
+    report(f"prefilter GA         : {ga_on.prefilter_screened} screened, "
+           f"{ga_on.prefilter_pruned} pruned "
+           f"({ga_on.prefilter_prune_rate:.0%}), "
+           f"{ga_on.evaluations} exact evals vs {ga_off.evaluations} "
+           "unfiltered (identical best)")
     return {
         "n_cns": len(graph.cns),
         "schedules_per_sec": eng_inc,
@@ -129,6 +209,19 @@ def run(report=print, full: bool = False) -> dict:
         "checkpoint_resume_rate": hit_rate,
         "checkpoint_cns_skipped_frac": st["cns_skipped"] / max(cns_total, 1),
         "checkpoint_snapshots": st["snapshots"],
+        "vectorized": {
+            "batched_genomes_per_sec": batched,
+            "batched_offspring_genomes_per_sec": batched_off,
+            "exact_population_genomes_per_sec": exact_pop,
+            "batched_speedup_vs_exact": batched / exact_pop,
+            "batch_size": p_batch,
+            "rank_correlation": corr,
+            "prefilter_screened": ga_on.prefilter_screened,
+            "prefilter_pruned": ga_on.prefilter_pruned,
+            "prefilter_prune_rate": ga_on.prefilter_prune_rate,
+            "prefilter_exact_evals": ga_on.evaluations,
+            "unfiltered_exact_evals": ga_off.evaluations,
+        },
     }
 
 

@@ -32,6 +32,10 @@ REALTIME = "realtime"
 # deterministic tier unless an entry here loosens it.
 MODULE_TIERS: tuple[tuple[str, str], ...] = (
     ("repro.launch", REALTIME),   # CLI entry points: printed step timings
+    # explicit pin (same tier the `repro` default implies): the batched
+    # fitness path feeds GA pruning decisions, so its determinism rules
+    # must survive any future loosening of a broader prefix
+    ("repro.core.vectorized", DETERMINISTIC),
     ("repro", DETERMINISTIC),
 )
 

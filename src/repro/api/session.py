@@ -1014,7 +1014,8 @@ class ExplorationSession:
                  max_workers: int | None = None, warm_start: bool = False,
                  retry_policy: RetryPolicy | None = None,
                  fault_injector: FaultInjector | None = None,
-                 deadline_s: float | None = None, repair: bool = False):
+                 deadline_s: float | None = None, repair: bool = False,
+                 prefilter: bool = False, prefilter_keep: float = 0.75):
         self._graphs = FifoCache(cache_limit)
         # evicted engines fold their checkpoint counters into a session
         # total, so `checkpoint_stats()` covers the whole session lifetime
@@ -1036,6 +1037,13 @@ class ExplorationSession:
         self.retry_policy = retry_policy
         self.fault_injector = fault_injector
         self.deadline_s = deadline_s
+        # vectorized GA prefilter (repro.core.vectorized.BatchedFitness):
+        # rank each generation's novel offspring approximately and prune the
+        # worst before exact rescoring. Off by default — approximate ranks
+        # can steer the GA's search trajectory, so prefiltered runs are only
+        # committed where their metrics are verified unchanged.
+        self.prefilter = prefilter
+        self.prefilter_keep = prefilter_keep
 
     # ---- cache introspection --------------------------------------------
     @property
@@ -1096,8 +1104,15 @@ class ExplorationSession:
         generations: int = 16,
         seed: int = 0,
         initial_allocations=(),
+        prefilter: bool | None = None,
     ) -> StreamResult:
-        """Steps 1-5 for one design point (the former `explore()` body)."""
+        """Steps 1-5 for one design point (the former `explore()` body).
+
+        `prefilter=True` (default: the session's setting) screens each GA
+        generation's novel offspring through the batched approximate
+        evaluator (`repro.core.vectorized.BatchedFitness`) and prunes the
+        worst-ranked before exact rescoring; reported metrics always come
+        from the exact engine."""
         # runtime_s is an operator-facing wall timing, excluded from content
         # keys and record equality  # staticcheck: allow(wall-clock)
         t0 = time.perf_counter()
@@ -1126,6 +1141,21 @@ class ExplorationSession:
             "energy": lambda o: float(o[1]),
         }[objective]
 
+        if prefilter is None:
+            prefilter = self.prefilter
+        prefilter_fn = None
+        if prefilter:
+            from repro.core.vectorized import get_batched_fitness
+            bf = get_batched_fitness(engine, priority=priority,
+                                     strict_layers=strict)
+
+            def prefilter_fn(genomes: np.ndarray) -> np.ndarray:
+                # rank in canonical form so symmetry-equivalent genomes
+                # screen identically (mirrors the exact path above)
+                if canon is not None:
+                    genomes = np.stack([canon(g) for g in genomes])
+                return np.asarray(bf.scores(genomes))
+
         if len(workload) == 1 or all(len(f) == 1 for f in feas):
             alloc = np.array([f[0] for f in feas])
             ga_res = None
@@ -1142,6 +1172,8 @@ class ExplorationSession:
                 scalarize=scalarize, seed=seed,
                 cache_key=core_symmetry_cache_key(accelerator),
                 dedup=False,
+                prefilter=prefilter_fn,
+                prefilter_keep=self.prefilter_keep,
             )
             ga_res = ga.run(initial=initial_allocations)
             alloc = ga_res.best_genome

@@ -18,6 +18,13 @@ evaluate_population`). The `pop + offspring` union is deduplicated by cache
 key before environmental selection, so identical genomes cannot inflate the
 fronts and waste crowding-distance slots on copies.
 
+An optional approximate-fitness `prefilter` (see `repro.core.vectorized.
+BatchedFitness`) screens each generation's novel offspring: it ranks them by
+approximate NSGA-II survivorship and drops the bottom `1 - prefilter_keep`
+fraction before they ever reach the exact evaluator. Approximate objectives
+are used for that ranking only — every objective value entering selection or
+the returned result comes from the exact evaluator.
+
 Determinism contract: random draws are consumed genome-by-genome in the
 same order as the original scalar implementation, so a fixed `seed`
 reproduces the pre-vectorization evolution trajectory bit-for-bit (with
@@ -87,10 +94,17 @@ class GAResult:
     evaluations: int = 0              # unique genomes actually evaluated
     queries: int = 0                  # fitness lookups incl. memo hits
     cache_hits: int = 0               # queries served by the genome memo
+    prefilter_screened: int = 0       # offspring ranked by the prefilter
+    prefilter_pruned: int = 0         # offspring it dropped before rescore
 
     @property
     def cache_hit_rate(self) -> float:
         return self.cache_hits / self.queries if self.queries else 0.0
+
+    @property
+    def prefilter_prune_rate(self) -> float:
+        return (self.prefilter_pruned / self.prefilter_screened
+                if self.prefilter_screened else 0.0)
 
 
 class GeneticAllocator:
@@ -128,6 +142,9 @@ class GeneticAllocator:
         patience: int = 8,
         cache_key: Callable[[np.ndarray], bytes] | None = None,
         dedup: bool = True,
+        prefilter: Callable[[np.ndarray], np.ndarray] | None = None,
+        prefilter_keep: float = 0.75,
+        prefilter_min_batch: int = 8,
     ):
         if evaluate is None and evaluate_population is None:
             raise ValueError("pass evaluate= or evaluate_population=")
@@ -157,6 +174,18 @@ class GeneticAllocator:
         self.queries = 0
         self.cache_hits = 0
         self.dedup = dedup
+        # approximate-fitness offspring screening (see `_prefilter_offspring`):
+        # `prefilter` maps a (K, G) genome batch to (K, M) approximate
+        # objectives; each generation's *novel* offspring are ranked by
+        # approximate NSGA-II survivorship and only the top `prefilter_keep`
+        # fraction is exactly evaluated — the rest never enter the union.
+        # Screening is skipped below `prefilter_min_batch` novel rows, where
+        # the batched scorer's fixed cost outweighs the pruned exact work.
+        self.prefilter = prefilter
+        self.prefilter_keep = float(prefilter_keep)
+        self.prefilter_min_batch = int(prefilter_min_batch)
+        self.prefilter_screened = 0
+        self.prefilter_pruned = 0
 
     # ---- batched genome hashing / fitness memo -----------------------------
     def _keys(self, genomes: np.ndarray) -> list[bytes]:
@@ -220,6 +249,34 @@ class GeneticAllocator:
             if g[j] in self.feasible[i] and g[i] in self.feasible[j]:
                 g[i], g[j] = g[j], g[i]
 
+    # ---- approximate-fitness offspring screening ---------------------------
+    def _prefilter_offspring(self, off: np.ndarray) -> np.ndarray:
+        """Screen one offspring batch through the approximate evaluator.
+
+        Novel (memo-missing) offspring are scored approximately and ranked
+        exactly the way NSGA-II environmental selection would rank them
+        (nondominated front, then crowding distance); only the top
+        `prefilter_keep` fraction survives to exact evaluation — the rest
+        never enter the union. Memo-hit offspring are free and always pass.
+        The approximate objectives never leave this method: survivors are
+        re-scored by the exact evaluator through the fitness memo, so every
+        objective value the search stores comes from the oracle."""
+        keys = self._keys(off)
+        novel = [r for r, k in enumerate(keys) if k not in self._cache]
+        if len(novel) < self.prefilter_min_batch or self.prefilter_keep >= 1.0:
+            return off
+        approx = np.asarray(self.prefilter(off[novel]), dtype=float)
+        n_keep = int(np.ceil(self.prefilter_keep * len(novel)))
+        order: list[int] = []
+        for front in fast_nondominated_sort(approx):
+            cd = crowding_distance(approx[front])
+            order.extend(front[np.argsort(-cd, kind="stable")].tolist())
+        self.prefilter_screened += len(novel)
+        self.prefilter_pruned += len(novel) - n_keep
+        keep = set(range(len(off))) - set(novel)
+        keep |= {novel[i] for i in order[:n_keep]}
+        return off[sorted(keep)]  # generation order preserved
+
     # ---- main loop ---------------------------------------------------------
     def run(self, initial: Sequence[np.ndarray] = ()) -> GAResult:
         P, G = self.pop_size, self.n_genes
@@ -248,6 +305,8 @@ class GeneticAllocator:
                 if rng.random() < self.mutation_p:
                     self._mutate_inplace(child)
                 off[k] = child
+            if self.prefilter is not None:
+                off = self._prefilter_offspring(off)
             # ---- NSGA-II environmental selection on parents+offspring -------
             union = np.ascontiguousarray(np.concatenate([pop, off]))
             ukeys = self._keys(union)
@@ -295,4 +354,6 @@ class GeneticAllocator:
             evaluations=self.evaluations,
             queries=self.queries,
             cache_hits=self.cache_hits,
+            prefilter_screened=self.prefilter_screened,
+            prefilter_pruned=self.prefilter_pruned,
         )

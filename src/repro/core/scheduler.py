@@ -854,21 +854,18 @@ def get_engine(graph: CNGraph, cost_model: CostModel,
     """Engine for (graph, cost_model, accelerator), cached on the graph.
 
     Keyed on content — the accelerator (hashable frozen dataclass), the cost
-    function, and the workload identity — so independently constructed but
-    equivalent CostModels (e.g. one per `evaluate_allocation` call) share one
-    precomputed engine instead of each paying the table build."""
+    function, and the workload's `cache_key()` — so independently constructed
+    but equivalent CostModels (e.g. one per `evaluate_allocation` call, or a
+    `from_dict` round-trip of the same workload) share one precomputed engine
+    instead of each paying the table build."""
     cache = getattr(graph, "_engine_cache", None)
     if cache is None:
         cache = graph._engine_cache = {}
-    # in-memory cache key only, never serialized; the engine below pins the
-    # workload id for the entry's life  # staticcheck: allow(id-hash)
-    key = (accelerator, cost_model.cost_fn, id(cost_model.workload))
+    key = (accelerator, cost_model.cost_fn, cost_model.workload.cache_key())
     engine = cache.get(key)
     if engine is None:
         if len(cache) >= _ENGINES_PER_GRAPH:
             cache.pop(next(iter(cache)))
-        # the engine holds a strong ref to cost_model (and its workload),
-        # pinning the workload id for the lifetime of the cache entry
         engine = cache[key] = ScheduleEngine(graph, cost_model, accelerator)
     return engine
 

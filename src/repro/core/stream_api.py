@@ -187,11 +187,13 @@ def explore(
     generations: int = 16,
     seed: int = 0,
     initial_allocations=(),
+    prefilter: bool | None = None,
 ) -> StreamResult:
     return _session().explore(
         workload, accelerator, granularity=granularity, objective=objective,
         priority=priority, pop_size=pop_size, generations=generations,
-        seed=seed, initial_allocations=initial_allocations)
+        seed=seed, initial_allocations=initial_allocations,
+        prefilter=prefilter)
 
 
 def explore_granularity(

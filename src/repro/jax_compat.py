@@ -11,6 +11,21 @@ from __future__ import annotations
 import jax
 
 
+def compat_pallas_interpret() -> bool:
+    """Default `interpret=` flag for Pallas calls on this backend.
+
+    Pallas kernels only compile natively on device backends (TPU/GPU); on
+    the CPU backend every kernel must run through the interpreter, which
+    executes the same lax ops inside jit (slower, but numerically the same
+    program). Call sites use this as the default so the kernel path stays
+    exercised wherever a device backend is available.
+
+        >>> isinstance(compat_pallas_interpret(), bool)
+        True
+    """
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+
+
 def compat_make_mesh(shape, axes, **kw):
     """`jax.make_mesh` across jax versions.
 

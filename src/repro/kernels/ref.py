@@ -10,6 +10,55 @@ import jax.numpy as jnp
 F32 = jnp.float32
 
 
+def prefix_sum(x):
+    """Inclusive prefix sum over the last axis by shift-doubling.
+
+    `jnp.cumsum` lowers to XLA's generic associative scan, which on CPU
+    materializes odd/even slice splits per level — measurably slower than
+    log2(W) shifted adds for the short item axes the scheduler wavefronts
+    produce. Kept as the one prefix-sum spelling the fitness path uses so
+    the Pallas kernel and the jnp reference accumulate in the same order.
+    """
+    k = 1
+    w = x.shape[-1]
+    while k < w:
+        pad = jnp.zeros(x.shape[:-1] + (k,), x.dtype)
+        x = x + jnp.concatenate([pad, x[..., :-k]], axis=-1)
+        k *= 2
+    return x
+
+
+def prefix_max(x, identity: float = -1e30):
+    """Inclusive prefix max over the last axis by shift-doubling."""
+    k = 1
+    w = x.shape[-1]
+    while k < w:
+        pad = jnp.full(x.shape[:-1] + (k,), identity, x.dtype)
+        x = jnp.maximum(x, jnp.concatenate([pad, x[..., :-k]], axis=-1))
+        k *= 2
+    return x
+
+
+def serialize_prefix_ref(free0, release, dur):
+    """FCFS prefix-serialization of independent resources over ordered items.
+
+    ``free0``: (..., R) — time each resource becomes available; ``release``/
+    ``dur``: (..., R, W) — per-item earliest start and occupancy duration on
+    its resource, in FCFS service order along the last axis. Implements the
+    queue recurrence ``f_k = max(f_{k-1}, r_k) + d_k`` (``f_0 = free0``) in
+    closed form: with ``S_k = cumsum(d)`` the recurrence unrolls to
+    ``f_k = S_k + max(free0, cummax_k(r_k - S_{k-1}))`` — prefix ops only,
+    so the whole wavefront serializes without a sequential loop. Items not
+    on a resource are encoded as ``d = 0, r = -1e30`` (they leave the queue
+    state untouched). Returns ``(finish (..., R, W), new_free (..., R))``.
+    """
+    s = prefix_sum(dur)
+    g = release - (s - dur)
+    run = jnp.maximum(prefix_max(g), free0[..., None])
+    fin = s + run
+    return fin, fin[..., -1]
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """q: (B,H,S,D); k,v: (B,H,T,D) -> (B,H,S,D). Naive softmax attention."""
     B, H, S, D = q.shape

@@ -1,0 +1,73 @@
+"""Pallas wavefront resource-update kernel for the batched fitness path.
+
+One step of `repro.core.vectorized.BatchedFitness` must FCFS-serialize the
+current wavefront's items on every contended resource (cores, bus/link
+channels, the DRAM port) for every genome of the population at once: a
+`(P x R)` block of independent queues, each served in a fixed item order.
+The queue recurrence ``f_k = max(f_{k-1}, r_k) + d_k`` is associative once
+rewritten over prefix sums (see `repro.kernels.ref.serialize_prefix_ref`),
+so the whole update is cumsum/cummax/add over the item axis — exactly the
+row-block shape Pallas wants: each grid step loads a `(rows, W)` tile of
+release/duration rows plus its `(rows, 1)` availability column into VMEM
+and writes the serialized finish times back.
+
+On CPU-only jax the kernel runs in `interpret=True` mode (the
+`jax_compat.compat_pallas_interpret` default), which executes the same lax
+program under jit; on TPU/GPU it compiles natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.jax_compat import compat_pallas_interpret
+
+
+def _serialize_kernel(free_ref, rel_ref, dur_ref, fin_ref, free_out_ref):
+    d = dur_ref[...]
+    s = jnp.cumsum(d, axis=-1)
+    g = rel_ref[...] - (s - d)
+    run = jnp.maximum(jax.lax.cummax(g, axis=1), free_ref[...])
+    fin = s + run
+    fin_ref[...] = fin
+    free_out_ref[...] = fin[:, -1:]
+
+
+def serialize_prefix(free0, release, dur, *, block_rows: int = 128,
+                     interpret: bool | None = None):
+    """Pallas twin of `repro.kernels.ref.serialize_prefix_ref`.
+
+    ``free0``: (..., R); ``release``/``dur``: (..., R, W) -> ``(finish
+    (..., R, W), new_free (..., R))``. Leading axes are flattened to queue
+    rows and processed in `block_rows` tiles.
+    """
+    if interpret is None:
+        interpret = compat_pallas_interpret()
+    w = release.shape[-1]
+    lead = release.shape[:-1]
+    rel = release.reshape(-1, w)
+    d = dur.reshape(-1, w)
+    fr = free0.reshape(-1, 1)
+    rows = rel.shape[0]
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        rel = jnp.pad(rel, ((0, pad), (0, 0)), constant_values=0.0)
+        d = jnp.pad(d, ((0, pad), (0, 0)), constant_values=0.0)
+        fr = jnp.pad(fr, ((0, pad), (0, 0)), constant_values=0.0)
+    fin, free = pl.pallas_call(
+        _serialize_kernel,
+        grid=(rel.shape[0] // br,),
+        in_specs=[pl.BlockSpec((br, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((br, w), lambda i: (i, 0)),
+                  pl.BlockSpec((br, w), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, w), lambda i: (i, 0)),
+                   pl.BlockSpec((br, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct(rel.shape, rel.dtype),
+                   jax.ShapeDtypeStruct((rel.shape[0], 1), rel.dtype)],
+        interpret=interpret,
+    )(fr, rel, d)
+    if pad:
+        fin, free = fin[:rows], free[:rows]
+    return fin.reshape(*lead, w), free[:, 0].reshape(*lead)

@@ -5,10 +5,11 @@
    (external http(s)/mailto links and pure #anchors are skipped — no
    network access here).
 2. Runs the executable docstring examples of the public API surface
-   through `doctest`.  The `repro.api` and `repro.analysis` packages are
-   walked automatically (every public module — no underscore-prefixed name
-   part — is included), so a new module cannot silently skip the gate;
-   `EXTRA_MODULES` pins the public surface outside those packages.
+   through `doctest`.  The `repro.api`, `repro.analysis`, and `repro.core`
+   packages are walked automatically (every public module — no
+   underscore-prefixed name part — is included), so a new module cannot
+   silently skip the gate; `EXTRA_MODULES` pins the public surface outside
+   those packages.
 
 Exits non-zero on any broken link or failed example.
 """
@@ -27,14 +28,11 @@ MARKDOWN = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md",
             "ISSUE.md", "SNIPPETS.md"]
 
 # packages whose public modules are discovered recursively
-DISCOVER_PACKAGES = ["repro.api", "repro.analysis"]
+DISCOVER_PACKAGES = ["repro.api", "repro.analysis", "repro.core"]
 # public modules outside the discovered packages
 EXTRA_MODULES = [
     "repro.hw.topology",
     "repro.hw.catalog",
-    "repro.core.ga",
-    "repro.core.scheduler",
-    "repro.core.stream_api",
 ]
 
 
