@@ -1,9 +1,11 @@
 PY := PYTHONPATH=src python
 
-.PHONY: all lint test tier1 docs bench bench-quick bench-full bench-list faults
+.PHONY: all lint test tier1 docs coverage coverage-record bench bench-quick \
+	bench-full bench-list faults
 
-# default flow: static checks, the full suite, and the docs gate
-all: lint test docs
+# default flow: static checks, the full suite, the docs gate, and the
+# function-coverage floor over the tier-1 suite
+all: lint test docs coverage
 
 # determinism linter over src/repro (exit 5 on unallowed violations);
 # `--format json` is available for machine consumption
@@ -24,6 +26,16 @@ tier1:
 # examples (doctest) of the public API surface
 docs:
 	$(PY) tools/check_docs.py
+
+# function-coverage gate: traces the tier-1 suite with a built-in
+# sys.setprofile hook (no coverage/pytest-cov dependency) and fails any
+# module dropping below its recorded floor (tools/coverage_baseline.json)
+coverage:
+	$(PY) tools/check_coverage.py
+
+# refresh the recorded floors after intentionally growing the surface
+coverage-record:
+	$(PY) tools/check_coverage.py --record
 
 # fault-injection suite: retry/quarantine semantics, crash-safe stores,
 # pool-rebuild under worker kills, SIGKILL crash-restart of a shard

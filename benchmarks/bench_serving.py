@@ -1,0 +1,133 @@
+"""Closed-loop serving: SLO-vs-QPS curves over flat and chiplet archs.
+
+Sweeps seeded Poisson arrival rates against analytic phase costs for the
+LLM serving families (paper-style layer-fused scheduling supplies the
+prefill/decode costs; `repro.serve.simulator` replays the request stream
+against them under continuous batching).  The curve is the serving-side
+headline: sustained QPS and p50/p99 latency per arrival rate, plus the
+"max QPS within SLO" summary per workload x arch.
+
+Two inline exactness gates:
+
+* zero-load degeneracy — at the lowest swept rate no request ever queues,
+  so every latency must equal ``prefill_cc + decode_tokens * decode_cc``
+  composed from a *fresh* one-shot session's records, bit-for-bit; and
+* replay determinism — re-running the sweep in a fresh session must
+  reproduce every curve row bit-identically.
+
+Quick mode sweeps 4 rates x {transformer, rwkv} x {flat, chiplet};
+--full adds the ssm family and a finer 6-rate grid.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.api import DesignSpace, ExplorationSession, GAConfig, ServingSweep
+from repro.hw.catalog import mc_hetero, mc_hom_tpu, mc_hom_tpu_chip2
+from repro.serve.workloads import (decode_phase_of, rwkv_phases, ssm_phases,
+                                   transformer_phases)
+
+# flat multi-core + its 2-chiplet partition (same cores, added hop costs)
+SERVING_ARCHITECTURES = {
+    "MC:hom-TPU": mc_hom_tpu,
+    "MC:hom-TPU-chip2": mc_hom_tpu_chip2,
+    "MC:hetero": mc_hetero,
+}
+
+ZERO_LOAD_RATE = 1.0  # req/s: inter-arrival ~1e9 cc >> any request latency
+
+
+def _workloads(full: bool) -> dict:
+    dim = dict(d_model=48, n_layers=2, seq_len=16)
+    wls = {"transformer": transformer_phases(**dim),
+           "rwkv": rwkv_phases(**dim)}
+    if full:
+        wls["ssm"] = ssm_phases(**dim)
+    return wls
+
+
+def run(report=print, full: bool = False, seed: int = 0) -> dict:
+    rates = ((ZERO_LOAD_RATE, 1e3, 1e4, 3e4, 1e5, 3e5) if full
+             else (ZERO_LOAD_RATE, 1e4, 1e5, 3e5))
+    pop, gens = (16, 8) if full else (8, 4)
+    serving = ServingSweep(rates_rps=rates, slo_ms=(0.2, 1.0), batch_slots=4,
+                           n_requests=32 if full else 16, seed=seed,
+                           decode_tokens=8)
+    space = DesignSpace(
+        workloads=_workloads(full), archs=SERVING_ARCHITECTURES,
+        granularities=["layer"],
+        ga=GAConfig(pop_size=pop, generations=gens, seed=seed),
+        serving=serving)
+
+    report("== closed-loop serving: SLO-vs-QPS ==")
+    report(f"grid: {len(space)} phase points x {len(rates)} rates; "
+           f"batch_slots={serving.batch_slots} "
+           f"n_requests={serving.n_requests}")
+    sweep = ExplorationSession().run_serving(space)
+
+    # -- gate 1: the rate->0 leg must equal one-shot scheduling exactly --
+    # a fresh session schedules the phase workloads as ordinary one-shot
+    # points; with no contention every request latency must compose from
+    # those records bit-for-bit
+    phase_wls = {}
+    for wl_name, wl in _workloads(full).items():
+        phase_wls[wl_name] = wl
+        phase_wls[f"{wl_name}#decode"] = decode_phase_of(wl)
+    oneshot = ExplorationSession().run(DesignSpace(
+        workloads=phase_wls, archs=SERVING_ARCHITECTURES,
+        granularities=["layer"], ga=space.ga))
+    by_point = {(r.workload, r.arch): r for r in oneshot.records}
+    for wl_name in _workloads(full):
+        for arch_name in SERVING_ARCHITECTURES:
+            pre = by_point[(wl_name, arch_name)]
+            dec = by_point[(f"{wl_name}#decode", arch_name)]
+            want_cc = (pre.latency_cc
+                       + serving.decode_tokens * dec.latency_cc)
+            row = sweep.curve(wl_name, arch_name)[0]
+            assert row.rate_rps == ZERO_LOAD_RATE
+            got = {"p50": row.p50_ms, "p99": row.p99_ms, "mean": row.mean_ms}
+            want_ms = want_cc * (1e3 / serving.clock_hz)
+            assert all(v == want_ms for v in got.values()), (
+                f"zero-load leg diverged from one-shot scheduling for "
+                f"{wl_name} x {arch_name}: {got} != {want_ms}")
+            assert row.slo_attainment == 1.0 or want_ms > row.slo_ms
+
+    # -- gate 2: a fresh session replays every row bit-identically ------
+    replay = ExplorationSession().run_serving(space)
+    assert ([r.to_dict() for r in replay.records]
+            == [r.to_dict() for r in sweep.records]), \
+        "serving sweep is not replay-deterministic"
+
+    # -- report + metrics ----------------------------------------------
+    curves: dict = {}
+    for wl_name in space.workloads:
+        for arch_name in space.archs:
+            rows = sweep.curve(wl_name, arch_name)
+            tight = sweep.curve(wl_name, arch_name, slo_ms=0.2)
+            report(f"\n-- {wl_name} x {arch_name} "
+                   f"(prefill {rows[0].prefill_cc:.0f} cc, "
+                   f"decode {rows[0].decode_cc:.0f} cc/tok) --")
+            for r in tight:
+                report(f"  rate {r.rate_rps:>9.0f} rps | "
+                       f"p50 {r.p50_ms:8.4f} ms | p99 {r.p99_ms:8.4f} ms | "
+                       f"qps {r.qps:9.1f} | "
+                       f"SLO@{r.slo_ms:g}ms {r.slo_attainment:.2f}")
+            max_qps = sweep.max_qps_within_slo(wl_name, arch_name,
+                                               slo_ms=0.2)
+            report(f"  max sustained rate within 0.2 ms SLO: "
+                   f"{max_qps if max_qps is not None else 'none'} rps")
+            curves[(wl_name, arch_name)] = {
+                "curve": [r.to_dict() for r in rows],
+                "max_qps_within_0.2ms": max_qps,
+            }
+    assert all(not math.isnan(r.p99_ms) for r in sweep.records)
+    report(f"\n{len(sweep)} curve rows; {sweep.n_scheduled} phase points "
+           f"scheduled, {sweep.n_from_store} from store; "
+           f"wall {sweep.wall_s:.1f}s")
+    return {"rates_rps": list(rates), "slo_ms": list(serving.slo_ms),
+            "batch_slots": serving.batch_slots,
+            "n_requests": serving.n_requests, "curves": curves}
+
+
+if __name__ == "__main__":
+    run()

@@ -59,6 +59,8 @@ BENCHES = [
     ("sweep_runtime", "sweep runtime: serial vs pooled vs sharded executors",
      "benchmarks.bench_sweep_runtime",
      lambda a: {"full": a.full, "workers": a.workers}),
+    ("serving", "closed-loop serving (SLO-vs-QPS curves)",
+     "benchmarks.bench_serving", lambda a: {"full": a.full}),
     ("kernels", "kernels (Pallas blocks)",
      "benchmarks.bench_kernels", lambda a: {}),
     ("pipeline_plan", "pipeline planner (beyond-paper)",

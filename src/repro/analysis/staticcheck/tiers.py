@@ -36,6 +36,11 @@ MODULE_TIERS: tuple[tuple[str, str], ...] = (
     # fitness path feeds GA pruning decisions, so its determinism rules
     # must survive any future loosening of a broader prefix
     ("repro.core.vectorized", DETERMINISTIC),
+    # explicit pin for the same reason: serving traces are content-
+    # addressed values (pure-hash arrival gaps, bit-identical replay), so
+    # the wall-clock/unseeded-rng rules are load-bearing for repro.serve
+    # even though its sibling repro.launch is realtime
+    ("repro.serve", DETERMINISTIC),
     ("repro", DETERMINISTIC),
 )
 

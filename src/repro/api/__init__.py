@@ -31,8 +31,9 @@ is given: whole layers plus 8/16/32/64 row-band tilings.
 """
 from repro.api.archspec import ArchSpec, CoreSpec, as_arch_spec, catalog_specs
 from repro.api.designspace import DesignPoint, DesignSpace, GAConfig, \
-    arch_spec_similarity, fits_weights_on_chip, granularity_label, \
-    max_clusters, max_cores, min_act_mem, nearest_arch_chain, order_points
+    ServingSweep, arch_spec_similarity, fits_weights_on_chip, \
+    granularity_label, max_clusters, max_cores, min_act_mem, \
+    nearest_arch_chain, order_points
 from repro.api.session import (DEFAULT_GRANULARITIES, ExplorationRecord,
                                ExplorationSession, FifoCache,
                                GranularitySweep, ProcessExecutor, ResultStore,
@@ -53,7 +54,8 @@ from repro.hw.topology import (ClusterSpec, LinkSpec, TopologySpec,
 __all__ = [
     "ArchSpec", "CoreSpec", "as_arch_spec", "catalog_specs",
     "TopologySpec", "ClusterSpec", "LinkSpec", "partition_topology",
-    "DesignPoint", "DesignSpace", "GAConfig", "granularity_label",
+    "DesignPoint", "DesignSpace", "GAConfig", "ServingSweep",
+    "granularity_label",
     "min_act_mem", "max_cores", "max_clusters", "fits_weights_on_chip",
     "arch_spec_similarity", "nearest_arch_chain", "order_points",
     "ExplorationSession", "ExplorationRecord", "SweepResult",

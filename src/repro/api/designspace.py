@@ -174,6 +174,62 @@ class DesignPoint:
             ga=GAConfig(**spec["ga"]))
 
 
+@dataclasses.dataclass(frozen=True)
+class ServingSweep:
+    """The serving axes of a design space: arrival rates and SLOs.
+
+    Attaching one to a `DesignSpace` (``DesignSpace(serving=...)``) makes
+    arrival rate and SLO sweepable dimensions beside arch/granularity:
+    `ExplorationSession.run_serving` schedules each point's prefill/decode
+    phase workloads through the ordinary sweep pipeline (store-cached,
+    executor-parallel), then runs the closed-loop simulator
+    (`repro.serve.simulator`) once per (point, rate) and reports one
+    `ServingRecord` per (point, rate, slo).
+
+    Pure data, part of every serving record's content key.  `rates_rps`
+    are request arrival rates; `slo_ms` the latency targets; requests
+    decode `decode_tokens` tokens each (ignored by single-phase
+    workloads); `clock_ghz` converts scheduler cycles to wall time.
+
+        >>> sweep = ServingSweep(rates_rps=(100.0, 1000.0))
+        >>> sweep.slo_ms, sweep.batch_slots
+        ((50.0,), 4)
+        >>> ServingSweep(rates_rps=())
+        Traceback (most recent call last):
+            ...
+        ValueError: ServingSweep needs at least one arrival rate
+    """
+
+    rates_rps: tuple[float, ...]
+    slo_ms: tuple[float, ...] = (50.0,)
+    batch_slots: int = 4
+    n_requests: int = 32
+    seed: int = 0
+    decode_tokens: int = 16
+    clock_ghz: float = 1.0
+
+    def __post_init__(self):
+        # normalize list inputs to tuples (frozen: go through __setattr__)
+        object.__setattr__(self, "rates_rps",
+                           tuple(float(r) for r in self.rates_rps))
+        object.__setattr__(self, "slo_ms",
+                           tuple(float(s) for s in self.slo_ms))
+        if not self.rates_rps:
+            raise ValueError("ServingSweep needs at least one arrival rate")
+        if any(r <= 0.0 for r in self.rates_rps):
+            raise ValueError(f"arrival rates must be > 0: {self.rates_rps}")
+        if not self.slo_ms:
+            raise ValueError("ServingSweep needs at least one SLO")
+        if self.batch_slots < 1 or self.n_requests < 1:
+            raise ValueError("batch_slots and n_requests must be >= 1")
+        if self.clock_ghz <= 0.0:
+            raise ValueError(f"clock_ghz must be > 0, got {self.clock_ghz}")
+
+    @property
+    def clock_hz(self) -> float:
+        return self.clock_ghz * 1e9
+
+
 # constraint predicates receive the DesignPoint; helpers below build common ones
 Constraint = Callable[[DesignPoint], bool]
 
@@ -319,6 +375,7 @@ class DesignSpace:
         priorities: Sequence[str] = ("latency",),
         ga: GAConfig | None = None,
         constraints: Iterable[Constraint] = (),
+        serving: ServingSweep | None = None,
     ):
         self.workloads = _normalize_workloads(workloads)
         self.archs = _normalize_archs(archs)
@@ -327,6 +384,9 @@ class DesignSpace:
         self.priorities = list(priorities)
         self.ga = ga or GAConfig()
         self.constraints = list(constraints)
+        # serving axes (arrival rate x SLO), consumed by
+        # `ExplorationSession.run_serving`; None = one-shot sweeps only
+        self.serving = serving
 
     def points(self) -> Iterator[DesignPoint]:
         for wl_name, wl in self.workloads.items():

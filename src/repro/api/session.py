@@ -1615,6 +1615,149 @@ class ExplorationSession:
                                       warm_start, order, policies, progress)
         return stream
 
+    # ---- closed-loop serving sweeps ---------------------------------------
+    def run_serving(
+        self,
+        space: "DesignSpace | Iterable[DesignPoint]",
+        serving=None,
+        executor: "str | SweepExecutor" = "serial",
+        max_workers: int | None = None,
+        order: str = "declared",
+    ):
+        """Sweep the serving axes: one `ServingRecord` per (point, arrival
+        rate, SLO).
+
+        Phase costs come first: every point's prefill workload — and,
+        for LLM serving workloads (`repro.serve.workloads`), its attached
+        decode-phase workload — is scheduled through the ordinary `run`
+        pipeline, so phase costs are store-cached content-keyed records
+        and both executors produce bit-identical metrics.  The closed
+        loop itself (`repro.serve.simulator.simulate`) is then a pure
+        function of those costs and the seeded arrival trace, which makes
+        the whole SLO-vs-QPS curve deterministic: serial and process
+        executors, or a re-run against a warm store, yield the identical
+        record list.  Points whose phase scheduling was quarantined by
+        the retry policy are skipped (their rows are simply absent).
+
+        `serving` defaults to the space's own `ServingSweep`
+        (``DesignSpace(serving=...)``); passing it explicitly lets one
+        phase-cost store serve many load scenarios.
+
+            >>> from repro.api.designspace import (DesignSpace, GAConfig,
+            ...                                    ServingSweep)
+            >>> from repro.hw.catalog import sc_tpu
+            >>> from repro.serve.workloads import transformer_phases
+            >>> space = DesignSpace(
+            ...     workloads={"tfm": transformer_phases(
+            ...         d_model=32, n_layers=1, seq_len=8)},
+            ...     archs={"SC:TPU": sc_tpu}, granularities=["layer"],
+            ...     ga=GAConfig(pop_size=4, generations=2),
+            ...     serving=ServingSweep(rates_rps=(100.0, 1000.0),
+            ...                          slo_ms=(50.0,), n_requests=4,
+            ...                          decode_tokens=4))
+            >>> sweep = ExplorationSession().run_serving(space)
+            >>> len(sweep), sweep.n_scheduled     # 2 rates x 1 slo; 2 phases
+            (2, 2)
+            >>> [r.rate_rps for r in sweep.curve("tfm", "SC:TPU")]
+            [100.0, 1000.0]
+        """
+        from repro.api.designspace import ServingSweep  # noqa: F401
+        from repro.serve.simulator import (PhaseCosts, ServingRecord,
+                                           ServingSweepResult,
+                                           serving_record_key, simulate)
+        from repro.serve.arrivals import poisson_trace
+        from repro.serve.workloads import decode_phase_of
+
+        # wall_s is an operator-facing wall timing, excluded from content
+        # keys and records  # staticcheck: allow(wall-clock)
+        t0 = time.perf_counter()
+        if serving is None:
+            serving = getattr(space, "serving", None)
+        if serving is None:
+            raise ValueError(
+                "no ServingSweep: pass serving=... or declare the space "
+                "with DesignSpace(serving=ServingSweep(...))")
+        base_points = order_points(space, order)
+
+        # phase plan: the base (prefill) point plus, when the workload
+        # carries a decode phase, a sibling point for the decode workload
+        phase_points: list[DesignPoint] = []
+        queued: set[str] = set()
+        decode_keys: dict[str, str | None] = {}
+        for p in base_points:
+            decode_wl = decode_phase_of(p.workload)
+            plan = [p]
+            if decode_wl is not None:
+                plan.append(dataclasses.replace(
+                    p, workload_name=f"{p.workload_name}#decode",
+                    workload=decode_wl))
+                decode_keys[p.content_key()] = plan[-1].content_key()
+            else:
+                decode_keys[p.content_key()] = None
+            for q in plan:
+                key = q.content_key()
+                if key not in queued:
+                    queued.add(key)
+                    phase_points.append(q)
+
+        phase_sweep = self.run(phase_points, executor=executor,
+                               max_workers=max_workers)
+        by_key = {r.key: r for r in phase_sweep.records}
+
+        records: list[ServingRecord] = []
+        seen_rows: set[str] = set()
+        for p in base_points:
+            pkey = p.content_key()
+            prefill_rec = by_key.get(pkey)
+            if prefill_rec is None:      # quarantined phase: no curve rows
+                continue
+            dkey = decode_keys[pkey]
+            decode_rec = by_key.get(dkey) if dkey is not None else None
+            if dkey is not None and decode_rec is None:
+                continue
+            costs = PhaseCosts(
+                prefill_cc=prefill_rec.latency_cc,
+                prefill_pj=prefill_rec.energy_pj,
+                decode_cc=decode_rec.latency_cc if decode_rec else 0.0,
+                decode_pj=decode_rec.energy_pj if decode_rec else 0.0)
+            for rate in serving.rates_rps:
+                trace = poisson_trace(
+                    rate, serving.n_requests, seed=serving.seed,
+                    clock_hz=serving.clock_hz,
+                    decode_tokens=serving.decode_tokens)
+                sim = simulate(trace, costs, serving.batch_slots)
+                cc_to_ms = 1e3 / serving.clock_hz
+                for slo in serving.slo_ms:
+                    row_key = serving_record_key(
+                        pkey, dkey, rate, slo, serving.batch_slots,
+                        serving.n_requests, serving.seed, serving.clock_ghz,
+                        serving.decode_tokens)
+                    if row_key in seen_rows:   # duplicate walk entries
+                        continue
+                    seen_rows.add(row_key)
+                    records.append(ServingRecord(
+                        key=row_key, workload=p.workload_name,
+                        arch=p.arch.name, granularity=p.granularity_label,
+                        priority=p.priority, rate_rps=rate, slo_ms=slo,
+                        batch_slots=serving.batch_slots,
+                        n_requests=serving.n_requests, seed=serving.seed,
+                        clock_ghz=serving.clock_ghz,
+                        p50_ms=sim.p50_latency_cc() * cc_to_ms,
+                        p99_ms=sim.p99_latency_cc() * cc_to_ms,
+                        mean_ms=sim.mean_latency_cc() * cc_to_ms,
+                        energy_per_request_pj=sim.energy_per_request_pj(),
+                        qps=sim.qps(serving.clock_hz),
+                        slo_attainment=sim.slo_attainment(
+                            slo * 1e-3 * serving.clock_hz),
+                        prefill_cc=prefill_rec.latency_cc,
+                        decode_cc=decode_rec.latency_cc if decode_rec
+                        else 0.0,
+                        decode_tokens=serving.decode_tokens))
+        return ServingSweepResult(
+            records=records, n_scheduled=phase_sweep.n_scheduled,
+            n_from_store=phase_sweep.n_from_store,
+            wall_s=time.perf_counter() - t0)  # staticcheck: allow(wall-clock)
+
     # ---- queries over everything this session has seen -------------------
     def records(self) -> list[ExplorationRecord]:
         return self.store.values()

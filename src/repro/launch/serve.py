@@ -1,32 +1,35 @@
 """CLI serve driver (batched requests on the reduced config).
 
+Engine mode runs the real jit'd token loop:
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke \
       --requests 4 --max-new 16
+
+`--simulate` swaps the token engine for the analytic closed loop
+(`repro.serve.simulator`): phase costs are scheduled through an
+`ExplorationSession` for a serving workload family on a catalog
+accelerator, then a seeded Poisson stream is replayed against them.  Both
+modes share the `SlotBatcher` admission policy; the analytic mode never
+imports jax.
+
+  PYTHONPATH=src python -m repro.launch.serve --simulate \
+      --family transformer --hw-arch mc_hom_tpu --rate 1000 --requests 16
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import numpy as np
 
-from repro.configs import ARCHS, reduce_config
-from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.models.module import init_from_specs
-from repro.models.zoo import build_param_specs
-from repro.serve.engine import Request, ServeEngine
+def _run_engine(args):
+    import jax
+    import numpy as np
 
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b", choices=list(ARCHS))
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--production-mesh", action="store_true")
-    args = ap.parse_args(argv)
+    from repro.configs import ARCHS, reduce_config
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.module import init_from_specs
+    from repro.models.zoo import build_param_specs
+    from repro.serve.engine import Request, ServeEngine
 
     cfg = ARCHS[args.arch]
     if args.smoke:
@@ -34,7 +37,7 @@ def main(argv=None):
     mesh = (make_production_mesh() if args.production_mesh
             else make_host_mesh())
     params = init_from_specs(build_param_specs(cfg), jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, mesh=mesh, batch_slots=args.requests,
+    engine = ServeEngine(cfg, params, mesh=mesh, batch_slots=args.batch_slots,
                          max_len=args.prompt_len + args.max_new + 8,
                          prompt_len=args.prompt_len)
     rng = np.random.default_rng(0)
@@ -42,14 +45,72 @@ def main(argv=None):
                     max_new_tokens=args.max_new)
             for _ in range(args.requests)]
     t0 = time.perf_counter()
-    engine.run(reqs)
+    engine.serve(reqs)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out_tokens) for r in reqs)
     print(f"served {len(reqs)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s incl. compile)")
+          f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s incl. compile); "
+          f"peak occupancy {engine.max_active}/{engine.B}")
     for i, r in enumerate(reqs):
         print(f"req{i}: {r.out_tokens[:12]}...")
     return reqs
+
+
+def _run_simulator(args):
+    from repro.api.designspace import DesignSpace, GAConfig, ServingSweep
+    from repro.api.session import ExplorationSession
+    from repro.hw import catalog
+    from repro.serve.workloads import serving_workload
+
+    arch = getattr(catalog, args.hw_arch)
+    space = DesignSpace(
+        workloads={args.family: serving_workload(args.family)},
+        archs={args.hw_arch: arch}, granularities=["layer"],
+        ga=GAConfig(pop_size=8, generations=4),
+        serving=ServingSweep(rates_rps=tuple(args.rate),
+                             slo_ms=(args.slo_ms,),
+                             batch_slots=args.batch_slots,
+                             n_requests=args.requests,
+                             decode_tokens=args.max_new))
+    sweep = ExplorationSession().run_serving(space)
+    for r in sweep.curve(args.family, args.hw_arch):
+        print(f"rate {r.rate_rps:>10.1f} rps | p50 {r.p50_ms:8.4f} ms | "
+              f"p99 {r.p99_ms:8.4f} ms | qps {r.qps:10.1f} | "
+              f"SLO@{r.slo_ms:g}ms {r.slo_attainment:.2f} | "
+              f"{r.energy_per_request_pj:.3e} pJ/req")
+    return sweep
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--batch-slots", type=int, default=None,
+                    help="slot-pool size (default: --requests)")
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--simulate", action="store_true",
+                    help="analytic closed-loop simulator instead of the "
+                         "token engine")
+    ap.add_argument("--family", default="transformer",
+                    choices=["transformer", "rwkv", "ssm"],
+                    help="serving workload family (--simulate)")
+    ap.add_argument("--hw-arch", default="mc_hom_tpu",
+                    help="repro.hw.catalog accelerator name (--simulate)")
+    ap.add_argument("--rate", type=float, action="append", default=None,
+                    help="arrival rate(s) in req/s (--simulate, repeatable)")
+    ap.add_argument("--slo-ms", type=float, default=50.0,
+                    help="latency SLO in ms (--simulate)")
+    args = ap.parse_args(argv)
+    if args.batch_slots is None:
+        args.batch_slots = args.requests
+    if args.rate is None:
+        args.rate = [1000.0]
+    if args.simulate:
+        return _run_simulator(args)
+    return _run_engine(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+"""Fixture: an arrival sampler that reads real time instead of hashing.
+
+The serving contract (`repro.serve.arrivals`) demands pure-hash arrival
+gaps — a trace must be a content-addressed value. This is the classic way
+to break it: seeding inter-arrival randomness from the wall clock and
+stamping arrivals with the host's clock, so the "trace" can never replay.
+"""
+import random
+import time
+
+
+def sample_arrivals(rate_rps, n_requests):
+    t0 = time.time()                               # line 13: wall-clock
+    rng = random.Random()                          # line 14: unseeded rng
+    arrivals = []
+    t = t0
+    for _ in range(n_requests):
+        t += rng.expovariate(rate_rps)
+        arrivals.append(t - time.perf_counter())   # line 19: wall-clock
+    return arrivals

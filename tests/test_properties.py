@@ -1,0 +1,103 @@
+"""Property tests (hypothesis when installed, seeded fallback otherwise).
+
+Two contracts that hold for *all* inputs, not just the goldens:
+
+* `ResultStore.merge` is idempotent, commutative, and associative as a
+  record-set operation — the algebra the distributed shard-merge runtime
+  (`repro.api.distributed`) silently relies on when it folds per-shard
+  stores back together in arbitrary order.
+* `TopologySpec` BFS hop tables are metrics: zero diagonal, symmetric,
+  and triangle-inequality-consistent — the properties that make
+  hop-priced inter-cluster channels physically sensible for any
+  generated fabric, not just the catalog's.
+"""
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.api.session import ExplorationRecord, ResultStore
+from repro.hw.topology import TopologySpec
+
+pytestmark = pytest.mark.tier1
+
+N_UNIVERSE = 8   # records addressed by bitmask, so masks cover 0..255
+
+
+def _record(i: int) -> ExplorationRecord:
+    """Deterministic record #i: same i -> same key and metrics, honoring
+    the content-key promise merge depends on."""
+    return ExplorationRecord(
+        key=f"k{i}", workload=f"w{i % 3}", arch="A", arch_key="A",
+        granularity="layer", objective="edp", priority="latency",
+        latency_cc=float(10 + i), energy_pj=float(2 * i + 1),
+        edp=float((10 + i) * (2 * i + 1)), peak_mem_bytes=0.0,
+        act_peak_bytes=0.0, allocation=(i,), ga_evaluations=0,
+        runtime_s=0.0)
+
+
+def _store(mask: int) -> ResultStore:
+    s = ResultStore()
+    for i in range(N_UNIVERSE):
+        if mask & (1 << i):
+            s.put(_record(i))
+    return s
+
+
+def _keys(store: ResultStore) -> frozenset:
+    return frozenset(r.key for r in store.values())
+
+
+@settings(max_examples=30)
+@given(st.integers(0, 255))
+def test_merge_idempotent(mask):
+    s = _store(mask)
+    assert _keys(ResultStore.merge(s, s)) == _keys(s)
+    assert _keys(ResultStore.merge(s)) == _keys(s)
+
+
+@settings(max_examples=30)
+@given(st.integers(0, 255), st.integers(0, 255))
+def test_merge_commutative(a, b):
+    ab = ResultStore.merge(_store(a), _store(b))
+    ba = ResultStore.merge(_store(b), _store(a))
+    assert _keys(ab) == _keys(ba) == _keys(_store(a | b))
+    # first-wins dedup: identical keys carry identical metrics, so the
+    # merged *records* agree too, not just the key sets
+    assert ({r.key: r.edp for r in ab.values()}
+            == {r.key: r.edp for r in ba.values()})
+
+
+@settings(max_examples=20)
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 255))
+def test_merge_associative(a, b, c):
+    left = ResultStore.merge(ResultStore.merge(_store(a), _store(b)),
+                             _store(c))
+    right = ResultStore.merge(_store(a),
+                              ResultStore.merge(_store(b), _store(c)))
+    assert _keys(left) == _keys(right) == _keys(_store(a | b | c))
+
+
+def _fabric(n: int, kind: str) -> TopologySpec:
+    clusters = {f"t{i}": (f"c{i}",) for i in range(n)}
+    if kind == "ring":
+        return TopologySpec.ring(clusters)
+    return TopologySpec.mesh(clusters)
+
+
+@settings(max_examples=30)
+@given(st.integers(2, 8), st.sampled_from(["ring", "mesh"]))
+def test_hop_table_is_a_metric(n, kind):
+    hops = _fabric(n, kind).hop_table()
+    for i in range(n):
+        assert hops[i][i] == 0
+        for j in range(n):
+            assert hops[i][j] == hops[j][i]           # symmetry
+            assert i == j or hops[i][j] >= 1
+            for k in range(n):
+                assert hops[i][k] <= hops[i][j] + hops[j][k]   # triangle
+
+
+@settings(max_examples=20)
+@given(st.integers(2, 8), st.sampled_from(["ring", "mesh"]))
+def test_hop_table_survives_serialization(n, kind):
+    t = _fabric(n, kind)
+    assert TopologySpec.from_dict(t.to_dict()).hop_table() == t.hop_table()

@@ -1,0 +1,286 @@
+"""Closed-loop serving simulator: traces, batching, SLO curves (tier 1).
+
+Covers the serving contract end to end: seeded arrival traces replay
+bit-identically, the continuous-batching loop respects its occupancy and
+FIFO invariants, the rate->0 leg degenerates to one-shot scheduling
+exactly, and `ExplorationSession.run_serving` produces the identical
+SLO-vs-QPS curve from serial and process executors.
+"""
+import pytest
+
+from repro.api.designspace import DesignSpace, GAConfig, ServingSweep
+from repro.api.session import ExplorationSession
+from repro.hw.catalog import mc_hom_tpu, sc_tpu
+from repro.serve.arrivals import (RequestSpec, poisson_trace,
+                                  trace_from_jsonable, trace_to_jsonable,
+                                  uniform_trace, validate_trace)
+from repro.serve.batching import SlotBatcher
+from repro.serve.simulator import (PhaseCosts, ServingRecord,
+                                   serving_record_key, simulate)
+from repro.serve.workloads import (decode_phase_of, rwkv_phases,
+                                   serving_workload, ssm_phases,
+                                   transformer_phases)
+
+pytestmark = pytest.mark.tier1
+
+COSTS = PhaseCosts(prefill_cc=100.0, prefill_pj=4.0,
+                   decode_cc=10.0, decode_pj=1.0)
+
+
+def _tiny_space(**serving_kw):
+    serving_kw.setdefault("rates_rps", (1.0, 1e5))
+    serving_kw.setdefault("n_requests", 8)
+    serving_kw.setdefault("decode_tokens", 4)
+    return DesignSpace(
+        workloads={"tfm": transformer_phases(d_model=32, n_layers=1,
+                                             seq_len=8)},
+        archs={"SC:TPU": sc_tpu}, granularities=["layer"],
+        ga=GAConfig(pop_size=4, generations=2),
+        serving=ServingSweep(**serving_kw))
+
+
+# ---- arrival traces -------------------------------------------------------
+
+def test_poisson_trace_replay_bit_identical():
+    a = poisson_trace(1000.0, 32, seed=7)
+    b = poisson_trace(1000.0, 32, seed=7)
+    assert trace_to_jsonable(a) == trace_to_jsonable(b)
+    assert trace_from_jsonable(trace_to_jsonable(a)) == a
+
+
+def test_poisson_trace_seed_and_rate_sensitivity():
+    base = [r.t_arrive_cc for r in poisson_trace(1000.0, 16, seed=0)]
+    other_seed = [r.t_arrive_cc for r in poisson_trace(1000.0, 16, seed=1)]
+    assert base != other_seed
+    # same seed, 2x rate: every arrival time exactly halves (pure-hash
+    # gaps scale, they do not resample)
+    double = [r.t_arrive_cc for r in poisson_trace(2000.0, 16, seed=0)]
+    assert all(d == t / 2.0 for t, d in zip(base, double))
+
+
+def test_poisson_trace_shape():
+    t = poisson_trace(500.0, 16, seed=3, decode_tokens=9, prompt_tokens=21)
+    assert [r.rid for r in t] == list(range(16))
+    assert t[0].t_arrive_cc == 0.0
+    assert all(a.t_arrive_cc <= b.t_arrive_cc for a, b in zip(t, t[1:]))
+    assert all(r.decode_tokens == 9 and r.prompt_tokens == 21 for r in t)
+
+
+def test_validate_trace_rejects_malformed():
+    t = list(poisson_trace(100.0, 4))
+    with pytest.raises(ValueError):
+        validate_trace([])
+    with pytest.raises(ValueError):
+        validate_trace(list(reversed(t)))          # not time-sorted
+    with pytest.raises(ValueError):
+        validate_trace(t[:2] + t[:1])              # rids not dense
+
+
+def test_uniform_trace_gaps():
+    t = uniform_trace(250.0, 4)
+    assert [r.t_arrive_cc for r in t] == [0.0, 250.0, 500.0, 750.0]
+
+
+# ---- simulator invariants -------------------------------------------------
+
+def test_simulate_replay_bit_identical():
+    trace = poisson_trace(5000.0, 24, seed=11)
+    a = simulate(trace, COSTS, batch_slots=3)
+    b = simulate(trace, COSTS, batch_slots=3)
+    assert a.to_dict() == b.to_dict()
+
+
+def test_unloaded_request_matches_one_shot_cost():
+    lone = simulate(uniform_trace(1e9, 3, decode_tokens=8), COSTS, 4)
+    for o in lone.requests:
+        assert o.latency_cc == COSTS.request_latency_cc(8)
+        assert o.energy_pj == COSTS.request_energy_pj(8)
+        assert o.queue_cc == 0.0
+
+
+def test_p99_monotone_in_arrival_rate():
+    rates = (10.0, 1e3, 1e4, 1e5, 1e6)
+    p99s = [simulate(poisson_trace(r, 32, seed=0, decode_tokens=8),
+                     COSTS, 2).p99_latency_cc() for r in rates]
+    assert all(a <= b for a, b in zip(p99s, p99s[1:]))
+    assert p99s[-1] > p99s[0]          # contention must actually appear
+
+
+def test_admission_never_exceeds_batch_slots():
+    burst = uniform_trace(0.0, 16, decode_tokens=8)    # all at t=0
+    for slots in (1, 2, 5):
+        sim = simulate(burst, COSTS, batch_slots=slots)
+        assert sim.max_active == min(slots, 16)
+        assert sim.n_requests == 16
+
+
+def test_fifo_admission_order():
+    sim = simulate(poisson_trace(1e6, 16, seed=2, decode_tokens=4),
+                   COSTS, batch_slots=2)
+    admits = [o.t_admit_cc for o in sim.requests]      # rid order
+    assert admits == sorted(admits)
+    for o in sim.requests:
+        assert o.t_arrive_cc <= o.t_admit_cc < o.t_done_cc
+
+
+def test_single_phase_workload_completes_at_prefill():
+    costs = PhaseCosts(prefill_cc=100.0, prefill_pj=2.0)   # decode_cc=0
+    sim = simulate(uniform_trace(0.0, 4, decode_tokens=5), costs, 2)
+    assert sorted(sim.latencies_cc()) == [100.0, 100.0, 200.0, 200.0]
+    assert sim.n_decode_steps == 0
+
+
+def test_energy_is_charged_per_active_request():
+    # 2 requests decoding concurrently: same per-request energy as alone
+    both = simulate(uniform_trace(0.0, 2, decode_tokens=8), COSTS, 2)
+    for o in both.requests:
+        assert o.energy_pj == COSTS.request_energy_pj(8)
+
+
+def test_slo_attainment_boundary_inclusive():
+    sim = simulate(uniform_trace(1e9, 1, decode_tokens=8), COSTS, 4)
+    lat = sim.requests[0].latency_cc
+    assert sim.slo_attainment(lat) == 1.0          # meeting exactly counts
+    assert sim.slo_attainment(lat - 1.0) == 0.0
+
+
+def test_prefill_priority_stalls_decoders():
+    # one decoder active; a newcomer lands mid-decode: its prefill step
+    # happens at the next step boundary, before further decode progress
+    trace = [RequestSpec(rid=0, t_arrive_cc=0.0, decode_tokens=4),
+             RequestSpec(rid=1, t_arrive_cc=105.0, decode_tokens=4)]
+    sim = simulate(trace, COSTS, batch_slots=2)
+    r0, r1 = sim.requests
+    assert r1.t_admit_cc == 110.0      # boundary after its arrival
+    # r0's remaining decode resumed after r1's prefill: latency grows by
+    # exactly one prefill_cc over its unloaded cost
+    assert r0.latency_cc == COSTS.request_latency_cc(4) + COSTS.prefill_cc
+
+
+def test_serving_record_roundtrip_and_keys():
+    k = serving_record_key("p", "d", 100.0, 50.0, 4, 8, 0, 1.0, 16)
+    assert k == serving_record_key("p", "d", 100.0, 50.0, 4, 8, 0, 1.0, 16)
+    assert k != serving_record_key("p", None, 100.0, 50.0, 4, 8, 0, 1.0, 16)
+    assert k != serving_record_key("p", "d", 100.0, 50.0, 8, 8, 0, 1.0, 16)
+    from repro.serve.simulator import _demo_serving_record
+    r = _demo_serving_record()
+    assert ServingRecord.from_dict(r.to_dict()) == r
+
+
+def test_slot_batcher_invariants():
+    b = SlotBatcher(2)
+    b.admit(0)
+    b.admit(1)
+    with pytest.raises(RuntimeError):
+        b.admit(2)                     # beyond capacity
+    with pytest.raises(RuntimeError):
+        b.release(9)                   # never admitted
+    b.release(0)
+    b.admit(2)
+    assert b.active() == [1, 2] and b.max_active == 2 and b.n_admitted == 3
+
+
+# ---- LLM workload families ------------------------------------------------
+
+def test_workload_families_carry_decode_phases():
+    for family, builder in (("transformer", transformer_phases),
+                            ("rwkv", rwkv_phases), ("ssm", ssm_phases)):
+        wl = builder(d_model=32, n_layers=1, seq_len=8)
+        assert decode_phase_of(wl) is not None
+        assert getattr(wl, "serving_family") == family
+        via_registry = serving_workload(family, d_model=32, n_layers=1,
+                                        seq_len=8)
+        assert getattr(via_registry, "serving_family") == family
+    assert decode_phase_of(object()) is None
+    with pytest.raises(KeyError):
+        serving_workload("mamba-unknown")
+
+
+# ---- run_serving: session-level contract ---------------------------------
+
+def test_run_serving_zero_load_matches_one_shot():
+    space = _tiny_space(rates_rps=(1.0,))
+    sweep = ExplorationSession().run_serving(space)
+    # a fresh session schedules the same phases as plain one-shot points
+    wl = transformer_phases(d_model=32, n_layers=1, seq_len=8)
+    recs = ExplorationSession().run(DesignSpace(
+        workloads={"tfm": wl, "tfm#decode": decode_phase_of(wl)},
+        archs={"SC:TPU": sc_tpu}, granularities=["layer"],
+        ga=space.ga)).records
+    by = {r.workload: r for r in recs}
+    want_cc = (by["tfm"].latency_cc
+               + space.serving.decode_tokens * by["tfm#decode"].latency_cc)
+    row = sweep.curve("tfm", "SC:TPU")[0]
+    want_ms = want_cc * (1e3 / space.serving.clock_hz)
+    assert (row.p50_ms, row.p99_ms, row.mean_ms) == (want_ms,) * 3
+
+
+def test_run_serving_serial_process_identical():
+    space = _tiny_space()
+    serial = ExplorationSession().run_serving(space, executor="serial")
+    pooled = ExplorationSession().run_serving(space, executor="process",
+                                              max_workers=2)
+    assert ([r.to_dict() for r in serial.records]
+            == [r.to_dict() for r in pooled.records])
+
+
+def test_run_serving_reuses_store_and_replays():
+    session = ExplorationSession()
+    space = _tiny_space()
+    first = session.run_serving(space)
+    again = session.run_serving(space)
+    assert first.n_scheduled == 2 and first.n_from_store == 0
+    assert again.n_scheduled == 0 and again.n_from_store == 2
+    assert ([r.to_dict() for r in first.records]
+            == [r.to_dict() for r in again.records])
+
+
+def test_run_serving_requires_sweep_axis():
+    space = DesignSpace(
+        workloads={"tfm": transformer_phases(d_model=32, n_layers=1,
+                                             seq_len=8)},
+        archs={"SC:TPU": sc_tpu}, granularities=["layer"],
+        ga=GAConfig(pop_size=4, generations=2))
+    with pytest.raises(ValueError, match="ServingSweep"):
+        ExplorationSession().run_serving(space)
+
+
+def test_run_serving_curve_shape_and_slo_axis():
+    space = _tiny_space(rates_rps=(1.0, 1e4, 1e5), slo_ms=(0.05, 50.0))
+    sweep = ExplorationSession().run_serving(space)
+    assert len(sweep) == 3 * 2
+    curve = sweep.curve("tfm", "SC:TPU", slo_ms=50.0)
+    assert [r.rate_rps for r in curve] == [1.0, 1e4, 1e5]
+    p99s = [r.p99_ms for r in curve]
+    assert all(a <= b for a, b in zip(p99s, p99s[1:]))
+    # identical latencies across the slo axis; only attainment may differ
+    tight = sweep.curve("tfm", "SC:TPU", slo_ms=0.05)
+    assert [r.p99_ms for r in tight] == p99s
+    assert all(t.slo_attainment <= w.slo_attainment
+               for t, w in zip(tight, curve))
+
+
+def test_run_serving_multi_arch_families():
+    space = DesignSpace(
+        workloads={"rwkv": rwkv_phases(d_model=32, n_layers=1, seq_len=8),
+                   "ssm": ssm_phases(d_model=32, n_layers=1, seq_len=8)},
+        archs={"SC:TPU": sc_tpu, "MC:hom": mc_hom_tpu},
+        granularities=["layer"], ga=GAConfig(pop_size=4, generations=2),
+        serving=ServingSweep(rates_rps=(1e4,), n_requests=6,
+                             decode_tokens=4))
+    sweep = ExplorationSession().run_serving(space)
+    assert len(sweep) == 4
+    for r in sweep.records:
+        assert r.qps > 0 and r.p50_ms <= r.p99_ms
+        assert r.energy_per_request_pj > 0
+
+
+def test_serving_sweep_validation():
+    with pytest.raises(ValueError):
+        ServingSweep(rates_rps=())
+    with pytest.raises(ValueError):
+        ServingSweep(rates_rps=(-1.0,))
+    with pytest.raises(ValueError):
+        ServingSweep(rates_rps=(1.0,), batch_slots=0)
+    s = ServingSweep(rates_rps=[3.0, 1.0])
+    assert s.rates_rps == (3.0, 1.0) and s.clock_hz == 1e9

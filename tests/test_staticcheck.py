@@ -49,6 +49,13 @@ def test_unseeded_rng_fixture():
         ("unseeded-rng", 13), ("unseeded-rng", 14)]
 
 
+def test_wallclock_arrival_sampler_fixture():
+    """The serving-contract violation: arrival gaps seeded from the wall
+    clock / process RNG instead of `repro.serve.arrivals`' pure hashes."""
+    assert _findings("bad_wallclock_arrivals.py") == [
+        ("wall-clock", 13), ("unseeded-rng", 14), ("wall-clock", 19)]
+
+
 def test_id_hash_fixture():
     assert _findings("bad_id_hash.py") == [("id-hash", 6), ("id-hash", 10)]
 

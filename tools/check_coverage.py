@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""Function-coverage gate over the tier-1 suite — no external deps.
+
+The environment has neither `coverage` nor `pytest-cov`, so this tool
+measures coverage itself: a `sys.setprofile` hook records every function
+*call* landing in `src/repro` while the tier-1 pytest suite runs
+in-process, and the static side enumerates every function/method
+definition per module via `ast`.  Function-level granularity (did each
+def ever execute?) is deliberate: call events cost far less than line
+tracing, so the gate stays cheap enough for `make all`, while still
+catching the regression that matters — a module drifting out of the
+tested surface.
+
+    PYTHONPATH=src python tools/check_coverage.py            # gate
+    PYTHONPATH=src python tools/check_coverage.py --record   # new baseline
+    PYTHONPATH=src python tools/check_coverage.py --report   # per-module %
+
+The committed baseline (`tools/coverage_baseline.json`) records a floor
+per module: measured percentage minus a small slack (so adding a couple
+of yet-untested helpers doesn't flake the gate, but a real drop fails
+it).  New modules absent from the baseline fail the gate until recorded
+— untested growth is an explicit decision, not a silent default.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import os
+import sys
+import threading
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_PKG = os.path.join(ROOT, "src", "repro")
+# running as a script puts tools/ first on sys.path; the suite needs the
+# repo root (benchmarks/) and src/ (repro) importable, like `python -m
+# pytest` from the checkout gets for free
+for _p in (ROOT, os.path.join(ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+BASELINE = os.path.join(ROOT, "tools", "coverage_baseline.json")
+SLACK_PCT = 3.0     # recorded floor = measured - slack
+
+
+def _module_name(path: str) -> str:
+    rel = os.path.relpath(path, os.path.join(ROOT, "src"))
+    return rel[:-3].replace(os.sep, ".")
+
+
+def defined_functions() -> dict[str, set[int]]:
+    """module -> first line numbers of every def (decorators included,
+    matching code-object co_firstlineno)."""
+    defs: dict[str, set[int]] = {}
+    for dirpath, _dirnames, filenames in os.walk(SRC_PKG):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=path)
+            lines: set[int] = set()
+            for node in ast.walk(tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    lines.add(min([d.lineno for d in node.decorator_list]
+                                  + [node.lineno]))
+            defs[_module_name(path)] = lines
+    return defs
+
+
+def run_suite_traced(pytest_args: list[str]) -> tuple[set, int]:
+    """Run pytest in-process with a call-event profiler; returns the set
+    of (filename, firstlineno) executed inside src/repro + the exit code."""
+    import pytest
+
+    executed: set[tuple[str, int]] = set()
+    prefix = SRC_PKG + os.sep
+
+    def profiler(frame, event, _arg):
+        if event == "call":
+            code = frame.f_code
+            if code.co_filename.startswith(prefix) \
+                    or code.co_filename == SRC_PKG:
+                executed.add((code.co_filename, code.co_firstlineno))
+
+    threading.setprofile(profiler)
+    sys.setprofile(profiler)
+    try:
+        rc = pytest.main(pytest_args)
+    finally:
+        sys.setprofile(None)
+        threading.setprofile(None)
+    return executed, int(rc)
+
+
+def measure(pytest_args: list[str]) -> tuple[dict[str, float], int]:
+    """Per-module covered percentage (function granularity) + pytest rc."""
+    defs = defined_functions()
+    executed, rc = run_suite_traced(pytest_args)
+    hit_by_module: dict[str, set[int]] = {}
+    for path, lineno in executed:
+        hit_by_module.setdefault(_module_name(path), set()).add(lineno)
+    coverage: dict[str, float] = {}
+    for module, lines in sorted(defs.items()):
+        if not lines:        # __init__ re-export shims etc.
+            continue
+        hit = len(lines & hit_by_module.get(module, set()))
+        coverage[module] = round(100.0 * hit / len(lines), 1)
+    return coverage, rc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--record", action="store_true",
+                    help="write tools/coverage_baseline.json from this run")
+    ap.add_argument("--report", action="store_true",
+                    help="print per-module coverage without gating")
+    ap.add_argument("--pytest-args", default="-q -m tier1 tests",
+                    help="pytest invocation to trace")
+    args = ap.parse_args(argv)
+
+    coverage, rc = measure(args.pytest_args.split())
+    if rc != 0:
+        print(f"coverage: traced suite FAILED (pytest rc={rc})")
+        return rc
+    total = round(sum(coverage.values()) / len(coverage), 1)
+
+    if args.report or args.record:
+        width = max(len(m) for m in coverage)
+        for module, pct in sorted(coverage.items()):
+            print(f"{module:{width}s}  {pct:5.1f}%")
+        print(f"{'TOTAL (mean over modules)':{width}s}  {total:5.1f}%")
+
+    if args.record:
+        floors = {m: max(0.0, round(p - SLACK_PCT, 1))
+                  for m, p in coverage.items()}
+        floors["__total__"] = max(0.0, round(total - SLACK_PCT, 1))
+        with open(BASELINE, "w") as f:
+            json.dump(floors, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"recorded baseline for {len(coverage)} modules -> {BASELINE}")
+        return 0
+
+    if not os.path.exists(BASELINE):
+        print(f"coverage: no baseline at {BASELINE}; run with --record")
+        return 1
+    with open(BASELINE) as f:
+        floors = json.load(f)
+    failures = []
+    for module, pct in sorted(coverage.items()):
+        floor = floors.get(module)
+        if floor is None:
+            failures.append(f"{module}: {pct:.1f}% but no recorded floor "
+                            "(new module: re-record the baseline)")
+        elif pct < floor:
+            failures.append(f"{module}: {pct:.1f}% < floor {floor:.1f}%")
+    if total < floors.get("__total__", 0.0):
+        failures.append(f"total: {total:.1f}% < floor {floors['__total__']}%")
+    if failures:
+        print("coverage: FAIL")
+        for line in failures:
+            print(f"  {line}")
+        return 1
+    print(f"coverage: OK ({len(coverage)} modules, mean {total:.1f}%, "
+          f"floors honored)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,9 +5,9 @@
    (external http(s)/mailto links and pure #anchors are skipped — no
    network access here).
 2. Runs the executable docstring examples of the public API surface
-   through `doctest`.  The `repro.api`, `repro.analysis`, and `repro.core`
-   packages are walked automatically (every public module — no
-   underscore-prefixed name part — is included), so a new module cannot
+   through `doctest`.  The `repro.api`, `repro.analysis`, `repro.core`,
+   and `repro.serve` packages are walked automatically (every public
+   module — no underscore-prefixed name part — is included), so a new module cannot
    silently skip the gate; `EXTRA_MODULES` pins the public surface outside
    those packages.
 
@@ -28,7 +28,8 @@ MARKDOWN = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md",
             "ISSUE.md", "SNIPPETS.md"]
 
 # packages whose public modules are discovered recursively
-DISCOVER_PACKAGES = ["repro.api", "repro.analysis", "repro.core"]
+DISCOVER_PACKAGES = ["repro.api", "repro.analysis", "repro.core",
+                     "repro.serve"]
 # public modules outside the discovered packages
 EXTRA_MODULES = [
     "repro.hw.topology",
