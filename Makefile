@@ -1,7 +1,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: all lint test tier1 docs coverage coverage-record bench bench-quick \
-	bench-full bench-list faults
+	bench-full bench-list faults trace
 
 # default flow: static checks, the full suite, the docs gate, and the
 # function-coverage floor over the tier-1 suite
@@ -36,6 +36,12 @@ coverage:
 # refresh the recorded floors after intentionally growing the surface
 coverage-record:
 	$(PY) tools/check_coverage.py --record
+
+# observability smoke: export Chrome/Perfetto traces (one 4-chiplet
+# catalog schedule + one serving-sim run) and the bottleneck report to
+# traces/ — open the JSON in chrome://tracing or ui.perfetto.dev
+trace:
+	$(PY) tools/trace_export.py --out traces
 
 # fault-injection suite: retry/quarantine semantics, crash-safe stores,
 # pool-rebuild under worker kills, SIGKILL crash-restart of a shard

@@ -41,6 +41,13 @@ MODULE_TIERS: tuple[tuple[str, str], ...] = (
     # the wall-clock/unseeded-rng rules are load-bearing for repro.serve
     # even though its sibling repro.launch is realtime
     ("repro.serve", DETERMINISTIC),
+    # two-channel observability split (docs/ARCHITECTURE.md §13): the
+    # sim-time channel (tracer, exporter, report) is explicitly pinned
+    # deterministic — traces/snapshots must stay byte-identical across
+    # runs — while the wall-time sink is the one REALTIME carve-out, the
+    # only repro.obs module allowed to read the wall clock
+    ("repro.obs", DETERMINISTIC),
+    ("repro.obs.realtime", REALTIME),
     ("repro", DETERMINISTIC),
 )
 

@@ -272,12 +272,28 @@ def run_shard(
     if heartbeat is not None:
         monitor = HeartbeatMonitor(heartbeat, total=len(points),
                                    shard_index=manifest.shard_index,
-                                   n_shards=manifest.n_shards)
+                                   n_shards=manifest.n_shards,
+                                   metrics=session.metrics_snapshot)
         policies.append(monitor)
-    sweep = session.run(points, executor=executor, max_workers=max_workers,
-                        progress=progress, policies=policies)
+    try:
+        sweep = session.run(points, executor=executor,
+                            max_workers=max_workers,
+                            progress=progress, policies=policies)
+    except BaseException:
+        # a dying shard still stamps a terminal beat, so the supervisor
+        # (and `tools/sweep_top.py`) can tell "crashed" from "hung"
+        if monitor is not None:
+            monitor.finalize("crashed")
+        raise
     if monitor is not None:
-        monitor.finalize("done" if sweep.stop_reason is None else "stopped")
+        # terminal status mirrors the CLI exit codes: stopped by a policy,
+        # quarantined points present (exit 3), or clean completion
+        if sweep.stop_reason is not None:
+            monitor.finalize("stopped")
+        elif sweep.n_failed:
+            monitor.finalize("quarantined")
+        else:
+            monitor.finalize("done")
     return sweep
 
 

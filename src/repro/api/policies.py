@@ -272,27 +272,37 @@ class HeartbeatMonitor(StopPolicy):
     Each write is atomic (tmp file + `os.replace`), so a reader never sees
     a torn heartbeat.  The file holds `done` / `failed` counts, the
     optional `total` / `shard_index` / `n_shards` identity, a monotonic
-    `seq`, and `updated_unix` — the only wall-clock field, for liveness
+    `seq`, and `updated_unix` — a wall-clock field, for liveness
     only, never for reproducibility.  `update`/`update_failure` always
     return False: a heartbeat observes, it never stops the sweep.
 
+    An optional `metrics` callable (e.g. a session's `metrics_snapshot`)
+    is sampled at every beat and embedded under ``metrics`` in the same
+    atomic write, together with a wall-clock `points_per_s` throughput —
+    the fields `tools/sweep_top.py` renders fleet-wide.
+
         >>> import json, os, tempfile
         >>> path = os.path.join(tempfile.mkdtemp(), "hb.json")
-        >>> hb = HeartbeatMonitor(path, total=5)
+        >>> hb = HeartbeatMonitor(path, total=5,
+        ...                       metrics=lambda: {"store_records": 7})
         >>> [hb.update(r) for r in _demo_stream()[:2]]
         [False, False]
         >>> _ = hb.update_failure("boom")
         >>> beat = json.load(open(path))
         >>> beat["done"], beat["failed"], beat["total"], beat["seq"]
         (2, 1, 5, 3)
+        >>> beat["metrics"]["store_records"], "points_per_s" in beat
+        (7, True)
     """
 
     def __init__(self, path: str, total: int | None = None,
-                 shard_index: int | None = None, n_shards: int | None = None):
+                 shard_index: int | None = None, n_shards: int | None = None,
+                 metrics=None):
         self.path = path
         self.total = total
         self.shard_index = shard_index
         self.n_shards = n_shards
+        self.metrics = metrics
         self.reset()
 
     def reset(self) -> None:
@@ -300,12 +310,23 @@ class HeartbeatMonitor(StopPolicy):
         self.done = 0
         self.failed = 0
         self.seq = 0
+        self._t0 = None
 
     def _beat(self, status: str = "running") -> None:
+        # wall-clock throughput + timestamps are liveness telemetry only —
+        # they never feed content-keyed records
+        now = time.time()  # staticcheck: allow(wall-clock)
+        if self._t0 is None:
+            self._t0 = now
+        elapsed = now - self._t0
         payload = {"status": status, "done": self.done, "failed": self.failed,
                    "total": self.total, "shard_index": self.shard_index,
                    "n_shards": self.n_shards, "seq": self.seq,
-                   "updated_unix": time.time()}  # staticcheck: allow(wall-clock)
+                   "updated_unix": now,
+                   "points_per_s": (self.done / elapsed if elapsed > 0
+                                    else 0.0)}
+        if self.metrics is not None:
+            payload["metrics"] = dict(self.metrics())
         tmp = f"{self.path}.tmp.{os.getpid()}"
         with open(tmp, "w") as fh:
             json.dump(payload, fh)

@@ -1015,7 +1015,8 @@ class ExplorationSession:
                  retry_policy: RetryPolicy | None = None,
                  fault_injector: FaultInjector | None = None,
                  deadline_s: float | None = None, repair: bool = False,
-                 prefilter: bool = False, prefilter_keep: float = 0.75):
+                 prefilter: bool = False, prefilter_keep: float = 0.75,
+                 tracer=None):
         self._graphs = FifoCache(cache_limit)
         # evicted engines fold their checkpoint counters into a session
         # total, so `checkpoint_stats()` covers the whole session lifetime
@@ -1044,6 +1045,13 @@ class ExplorationSession:
         # committed where their metrics are verified unchanged.
         self.prefilter = prefilter
         self.prefilter_keep = prefilter_keep
+        # optional sim-time tracer (repro.obs.Tracer): threaded into the
+        # schedule engine / GA of every explore() and counted against each
+        # sweep's computed/store-hit/retry/quarantine events.  None by
+        # default — the instrumented paths pay one branch, nothing else,
+        # and results are bit-identical either way.  Worker subprocesses
+        # never see it (fresh sessions are built inside workers).
+        self.tracer = tracer
 
     # ---- cache introspection --------------------------------------------
     @property
@@ -1118,6 +1126,8 @@ class ExplorationSession:
         t0 = time.perf_counter()
         accelerator = self._materialize(arch)
         engine = self.engine(workload, accelerator, granularity)
+        if self.tracer is not None:
+            engine.tracer = self.tracer
         graph = engine.graph
         feas = feasible_cores_per_layer(workload, accelerator)
 
@@ -1174,6 +1184,7 @@ class ExplorationSession:
                 dedup=False,
                 prefilter=prefilter_fn,
                 prefilter_keep=self.prefilter_keep,
+                tracer=self.tracer,
             )
             ga_res = ga.run(initial=initial_allocations)
             alloc = ga_res.best_genome
@@ -1241,6 +1252,21 @@ class ExplorationSession:
             for k, v in engine.ckpt_stats.items():
                 out[k] = out.get(k, 0) + v
         return out
+
+    def metrics_snapshot(self) -> dict:
+        """Operator-facing metrics of this session's current state: store
+        sizes plus (when a tracer is attached) its sorted counter map —
+        the payload `HeartbeatMonitor` embeds into shard heartbeats and
+        `tools/sweep_top.py` renders fleet-wide.
+
+        A pure read: calling it never mutates session, store, or tracer
+        state.
+        """
+        snap = {"store_records": len(self.store),
+                "store_failures": len(self.store.failures())}
+        if self.tracer is not None:
+            snap.update(self.tracer.snapshot()["counters"])
+        return snap
 
     def explore_granularity(
         self,
@@ -1459,6 +1485,8 @@ class ExplorationSession:
             served[failure.key] = _QUARANTINED
             state.n_failed += 1
             state.failures.append(failure)
+            if self.tracer is not None:
+                self.tracer.count("sweep.quarantined")
             self.store.put_failure(failure)
             for policy in policies:
                 observe = getattr(policy, "update_failure", None)
@@ -1497,6 +1525,11 @@ class ExplorationSession:
                             continue
                         served[key] = rec
                         state.n_computed += 1
+                        if self.tracer is not None:
+                            self.tracer.count("sweep.computed")
+                            if outcome.n_retries:
+                                self.tracer.count("sweep.retries",
+                                                  outcome.n_retries)
                         if rec.ga_warm_starts:
                             state.n_warm_started += 1
                         if progress is not None:
@@ -1506,6 +1539,8 @@ class ExplorationSession:
                         # early stop does not claim undelivered ones
                         delivered_hits.add(key)
                         state.store_hits += 1
+                        if self.tracer is not None:
+                            self.tracer.count("sweep.store_hits")
                     yield rec
                     for policy in policies:
                         if policy.update(rec):

@@ -145,6 +145,7 @@ class GeneticAllocator:
         prefilter: Callable[[np.ndarray], np.ndarray] | None = None,
         prefilter_keep: float = 0.75,
         prefilter_min_batch: int = 8,
+        tracer=None,
     ):
         if evaluate is None and evaluate_population is None:
             raise ValueError("pass evaluate= or evaluate_population=")
@@ -186,6 +187,11 @@ class GeneticAllocator:
         self.prefilter_min_batch = int(prefilter_min_batch)
         self.prefilter_screened = 0
         self.prefilter_pruned = 0
+        # optional sim-time tracer (repro.obs): one span per generation on
+        # the generation-index clock plus counter deltas.  The tracer only
+        # observes the existing counters — search output is bit-identical
+        # with tracing on or off.
+        self.tracer = tracer
 
     # ---- batched genome hashing / fitness memo -----------------------------
     def _keys(self, genomes: np.ndarray) -> list[bytes]:
@@ -288,7 +294,10 @@ class GeneticAllocator:
         history: list[float] = []
         stale = 0
         rng = self.rng
-        for _ in range(self.generations):
+        for gen in range(self.generations):
+            if self.tracer is not None:
+                ev0, ch0 = self.evaluations, self.cache_hits
+                pf0 = self.prefilter_pruned
             # ---- variation: tournament parents -> offspring -----------------
             # scalarize once per generation, not once per tournament comparison
             scal = [self.scalarize(o) for o in objs]
@@ -338,6 +347,19 @@ class GeneticAllocator:
             else:
                 stale = 0
             history.append(best)
+            if self.tracer is not None:
+                d_ev = self.evaluations - ev0
+                d_ch = self.cache_hits - ch0
+                d_pf = self.prefilter_pruned - pf0
+                self.tracer.add_span(
+                    "ga.generation", float(gen), float(gen + 1),
+                    evaluations=d_ev, cache_hits=d_ch,
+                    prefilter_pruned=d_pf, best=best)
+                self.tracer.count("ga.generations")
+                self.tracer.count("ga.evaluations", d_ev)
+                self.tracer.count("ga.cache_hits", d_ch)
+                self.tracer.count("ga.prefilter_pruned", d_pf)
+                self.tracer.observe("ga.best", best)
             if stale >= self.patience:  # "after the desired metric saturates"
                 break
         # ---- results -------------------------------------------------------

@@ -168,6 +168,9 @@ class ScheduleEngine:
         self.cost_model = cost_model
         self.accelerator = acc
         self.n = graph.n
+        # optional sim-time tracer (repro.obs); None keeps schedule() free
+        # of any tracing overhead beyond one attribute read per call
+        self.tracer = None
         tables = cost_model.precompute(graph, acc)
         self.tables = tables
 
@@ -809,6 +812,14 @@ class ScheduleEngine:
             mem_buffers=(ev_t, ev_d, ev_c, ev_k),
             chan_intervals=chan_intervals,
         )
+        tracer = self.tracer
+        if tracer is not None:
+            # sim-time channel: counters/histograms only (bounded memory per
+            # GA run); the tracer observes, it never steers the schedule.
+            tracer.count("engine.schedules")
+            tracer.count("engine.cns", n)
+            tracer.observe("engine.latency_cc", result.latency_cc)
+            tracer.observe("engine.energy_pj", result.energy_pj)
         if validate:
             if not record:
                 raise ValueError("validate=True needs record=True "

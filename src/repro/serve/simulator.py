@@ -143,6 +143,7 @@ class ServingSimResult:
     n_prefill_steps: int
     n_decode_steps: int
     makespan_cc: float       # first arrival -> last completion
+    steps: tuple = ()        # per engine step: (t0, t1, kind, n_active)
 
     @property
     def n_requests(self) -> int:
@@ -182,15 +183,20 @@ class ServingSimResult:
             "n_decode_steps": self.n_decode_steps,
             "makespan_cc": self.makespan_cc,
             "requests": [dataclasses.asdict(r) for r in self.requests],
+            "steps": [list(s) for s in self.steps],
         }
 
 
 def simulate(trace: Iterable[RequestSpec], costs: PhaseCosts,
-             batch_slots: int = 4) -> ServingSimResult:
+             batch_slots: int = 4, tracer=None) -> ServingSimResult:
     """Run the continuous-batching loop over one arrival trace.
 
     Deterministic: a pure function of (trace, costs, batch_slots) — same
     inputs, bit-identical `ServingSimResult` (the trace-replay contract).
+    An optional sim-time `tracer` (repro.obs) observes step counts; it
+    never changes the result — outputs are bit-identical with or without
+    it.  Every engine step is recorded in `result.steps` as
+    ``(t0, t1, kind, n_active)`` for the trace exporter's engine lane.
 
         >>> from repro.serve.arrivals import uniform_trace
         >>> costs = PhaseCosts(prefill_cc=100.0, prefill_pj=4.0,
@@ -213,6 +219,7 @@ def simulate(trace: Iterable[RequestSpec], costs: PhaseCosts,
     energy: dict[int, float] = {}
     done: dict[int, float] = {}
     n_prefill_steps = n_decode_steps = 0
+    steps: list[tuple[float, float, str, int]] = []
 
     while head < len(trace) or batcher.active():
         if not batcher.active():
@@ -239,12 +246,16 @@ def simulate(trace: Iterable[RequestSpec], costs: PhaseCosts,
                     batcher.release(req.rid)
                 else:
                     tokens_left[req.rid] = left
+            steps.append((t, t_end, "prefill", len(batcher.active())
+                          + sum(1 for r in admitted if r.rid in done)))
             t = t_end
             continue   # arrivals may have landed during prefill: re-admit
         # decode step: every active slot advances one token
         t_end = t + costs.decode_cc
         n_decode_steps += 1
-        for rid in batcher.active():
+        active = batcher.active()
+        steps.append((t, t_end, "decode", len(active)))
+        for rid in active:
             energy[rid] += costs.decode_pj
             tokens_left[rid] -= 1
             if tokens_left[rid] == 0:
@@ -258,12 +269,19 @@ def simulate(trace: Iterable[RequestSpec], costs: PhaseCosts,
                        t_admit_cc=admit_at[req.rid], t_done_cc=done[req.rid],
                        energy_pj=energy[req.rid])
         for req in trace)
+    if tracer is not None:
+        tracer.count("serving.requests", len(outcomes))
+        tracer.count("serving.prefill_steps", n_prefill_steps)
+        tracer.count("serving.decode_steps", n_decode_steps)
+        for o in outcomes:
+            tracer.observe("serving.latency_cc", o.latency_cc)
     return ServingSimResult(
         requests=outcomes, batch_slots=batch_slots,
         max_active=batcher.max_active, n_prefill_steps=n_prefill_steps,
         n_decode_steps=n_decode_steps,
         makespan_cc=max(o.t_done_cc for o in outcomes)
-        - min(o.t_arrive_cc for o in outcomes))
+        - min(o.t_arrive_cc for o in outcomes),
+        steps=tuple(steps))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,19 @@
+"""Fixture: wall-clock reads smuggled into sim-time tracer spans.
+
+The two-channel observability contract (docs/ARCHITECTURE.md §13): code
+on the sim-time channel records logical ticks or simulated cycles only.
+Reading the wall clock inside a sim-time span — or stamping a sim-time
+event with wall time — must be flagged; only `repro.obs.realtime` (a
+REALTIME-tier module) may bind the wall clock.
+"""
+import time
+
+from repro.obs.tracing import Tracer
+
+
+def traced_step(tracer: Tracer):
+    with tracer.span("sweep.point"):
+        t0 = time.perf_counter()         # line 16: wall-clock in a span
+        tracer.observe("wall_s", time.time())   # line 17: wall-clock
+    tracer.add_span("step", 0.0, time.perf_counter())  # line 18: wall-clock
+    return t0

@@ -56,6 +56,22 @@ def test_wallclock_arrival_sampler_fixture():
         ("wall-clock", 13), ("unseeded-rng", 14), ("wall-clock", 19)]
 
 
+def test_wallclock_span_fixture():
+    """The two-channel observability contract: wall-clock reads inside a
+    sim-time tracer span (or stamping sim-time events with wall time) are
+    flagged; only `repro.obs.realtime` may bind the wall clock."""
+    assert _findings("bad_wallclock_span.py") == [
+        ("wall-clock", 16), ("wall-clock", 17), ("wall-clock", 18)]
+
+
+def test_obs_tier_pins():
+    """`repro.obs` is pinned deterministic with the single REALTIME
+    carve-out for the wall-time sink."""
+    assert tier_of_module("repro.obs.tracing") == DETERMINISTIC
+    assert tier_of_module("repro.obs.export") == DETERMINISTIC
+    assert tier_of_module("repro.obs.realtime") == REALTIME
+
+
 def test_id_hash_fixture():
     assert _findings("bad_id_hash.py") == [("id-hash", 6), ("id-hash", 10)]
 

@@ -29,7 +29,7 @@ MARKDOWN = ["README.md", "ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md",
 
 # packages whose public modules are discovered recursively
 DISCOVER_PACKAGES = ["repro.api", "repro.analysis", "repro.core",
-                     "repro.serve"]
+                     "repro.obs", "repro.serve"]
 # public modules outside the discovered packages
 EXTRA_MODULES = [
     "repro.hw.topology",
